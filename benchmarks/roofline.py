@@ -1,0 +1,104 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+§Roofline table (per-cell three-term roofline, dominant bottleneck,
+useful-FLOP ratio) and picks hillclimb candidates.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str = "pod") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def bottleneck_note(cell: Dict) -> str:
+    dom = cell.get("dominant_term", "?")
+    if dom == "memory_s":
+        return ("HBM-traffic bound (pre-fusion byte accounting): raise "
+                "arithmetic intensity — larger per-chip tiles, fused "
+                "matmul+norm, bf16 cache/activations")
+    if dom == "collective_s":
+        return ("ICI bound: reshard to cut all-gathers (sequence-parallel "
+                "attention, EP all-to-all instead of replicated psum)")
+    return ("MXU bound: already compute-limited; only lower-precision "
+            "(int8/int4 PIM path) or fewer redundant flops help")
+
+
+def summarize(cells: List[Dict], markdown: bool = False) -> None:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    failed = [c for c in cells if c.get("status") not in ("ok", "skipped")]
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collective':>11s} {'dominant':>12s} {'useful':>7s}")
+    if markdown:
+        print("| arch | shape | compute (ms) | memory (ms) | collective "
+              "(ms) | dominant | MODEL/HLO flops |")
+        print("|---|---|---|---|---|---|---|")
+    else:
+        print(hdr)
+    ordered = sorted(ok, key=lambda c: (c["arch"],
+                                        SHAPE_ORDER.index(c["shape"])))
+    for c in ordered:
+        r = c["roofline"]
+        row = (c["arch"], c["shape"], r["compute_s"] * 1e3,
+               r["memory_s"] * 1e3, r["collective_s"] * 1e3,
+               c["dominant_term"].replace("_s", ""),
+               c["useful_flops_frac"])
+        if markdown:
+            print("| {} | {} | {:.2f} | {:.2f} | {:.2f} | {} | {:.2f} |"
+                  .format(*row))
+        else:
+            print(f"{row[0]:22s} {row[1]:12s} {row[2]:10.2f} {row[3]:10.2f} "
+                  f"{row[4]:11.2f} {row[5]:>12s} {row[6]:7.2f}")
+    print(f"\n{len(ok)} ok, {len(skipped)} documented skips, "
+          f"{len(failed)} failed")
+    # hillclimb candidate selection (worst compute fraction, most
+    # collective-bound, most PIM-representative = biggest serving GEMM cell)
+    if ok:
+        def frac(c):
+            r = c["roofline"]
+            tot = max(r["compute_s"] + r["memory_s"] + r["collective_s"],
+                      1e-12)
+            return r["compute_s"] / tot
+        worst = min(ok, key=frac)
+        coll = max(ok, key=lambda c: c["roofline"]["collective_s"] /
+                   max(c["roofline"]["compute_s"] +
+                       c["roofline"]["memory_s"] +
+                       c["roofline"]["collective_s"], 1e-12))
+        print(f"\nhillclimb candidates:")
+        print(f"  worst roofline fraction : {worst['arch']} x "
+              f"{worst['shape']}")
+        print(f"  most collective-bound   : {coll['arch']} x "
+              f"{coll['shape']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    if not cells:
+        print(f"no dry-run artifacts under {RESULT_DIR} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    summarize(cells, args.markdown)
+
+
+if __name__ == "__main__":
+    main()

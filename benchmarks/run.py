@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV. Usage:
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig9 fig11 # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.paper_figs import ALL_BENCHMARKS
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,value,derived")
+    failures = 0
+    for bench in ALL_BENCHMARKS:
+        if filters and not any(f in bench.__name__ for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value:.6g},{derived}")
+        print(f"# {bench.__name__} done in {time.time()-t0:.1f}s")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver (the paper's scenario): CNN inference executed on the
+simulated OPIMA PIM substrate, with accuracy + hardware estimates.
+
+Trains a reduced ResNet18 on a synthetic image task, deploys it into
+'OPCM cells' (4-bit quantization), runs inference through the bit-sliced
+PIM engine (exact and analog-readout modes), and reports the analytical
+OPIMA latency/energy next to the comparison platforms.
+
+  PYTHONPATH=src python examples/cnn_pim_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.benchmarks_impl.table2 import _acc, _train
+from repro.core.baselines import PHPIM_MODEL, ALL_PLATFORMS
+from repro.core.perfmodel import network_perf, total_power_w
+from repro.core.pim import PimConfig
+from repro.core.workloads import resnet18
+from repro.data.pipeline import synthetic_images
+from repro.models.cnn import cnn_forward, init_cnn
+
+layers = resnet18(8, 16, width=0.25)
+print(f"model: reduced ResNet18, {sum(l.weight_count for l in layers):,} "
+      f"params")
+xtr, ytr = synthetic_images(0, 256, 16, 8, noise=0.45)
+xte, yte = synthetic_images(1, 128, 16, 8, noise=0.45)
+xtr, xte = jnp.asarray(xtr), jnp.asarray(xte)
+ytr, yte = jnp.asarray(ytr), jnp.asarray(yte)
+
+params = init_cnn(layers, jax.random.PRNGKey(0))
+params = _train(layers, params, xtr, ytr, steps=60)
+
+acc_fp = _acc(params, layers, xte, yte)
+acc_pim = _acc(params, layers, xte, yte,
+               pim=PimConfig(weight_bits=4, act_bits=4))
+acc_analog = _acc(params, layers, xte, yte,
+                  pim=PimConfig(weight_bits=4, act_bits=4, analog=True,
+                                adc_bits=5), rng=jax.random.PRNGKey(9))
+print(f"accuracy: fp32 {acc_fp:.3f} | PIM int4 (exact) {acc_pim:.3f} | "
+      f"PIM analog 5b-ADC {acc_analog:.3f}")
+
+# hardware-side estimate for the FULL ResNet18 (paper Fig. 9/11/12 terms)
+full = resnet18()
+perf = network_perf("resnet18", full, weight_bits=4, act_bits=4)
+print(f"\nOPIMA @ {total_power_w():.1f} W:")
+print(f"  latency {perf.latency_s*1e3:.3f} ms "
+      f"(processing {perf.processing_s*1e3:.3f} + "
+      f"writeback {perf.writeback_s*1e3:.3f})")
+print(f"  {perf.fps:.0f} FPS | {perf.fps/total_power_w():.0f} FPS/W | "
+      f"EPB {perf.epb()*1e12:.0f} pJ/bit")
+print("\ncomparison platforms (same workload):")
+for p in ALL_PLATFORMS:
+    print(f"  {p.name:11s} {p.latency_s(full, 4)*1e3:8.3f} ms | "
+          f"{p.fps_per_watt(full, 4):8.1f} FPS/W | "
+          f"EPB {p.epb_j_per_bit()*1e12:7.0f} pJ/bit")
+print(f"  {'PhPIM':11s} {PHPIM_MODEL.latency_s('resnet18', full)*1e3:8.3f} ms"
+      f" | {PHPIM_MODEL.fps_per_watt('resnet18', full):8.1f} FPS/W")

@@ -1,0 +1,124 @@
+"""Table II (scaled): quantization-accuracy experiment.
+
+The paper trains 5 CNNs on real datasets and reports fp32/int8/int4
+accuracies (int8 drop small, int4 drop up to ~6%). Full-scale training is
+not feasible in this container (1 CPU core), so we reproduce the CLAIM the
+table supports — quantization-induced accuracy ordering and magnitude, and
+that OPIMA's PIM datapath preserves the quantized model's accuracy —
+on reduced CNNs trained on a synthetic separable image task.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pim import PimConfig
+from repro.core.workloads import mobilenet, resnet18, squeezenet
+from repro.data.pipeline import synthetic_images
+from repro.models.cnn import cnn_forward, init_cnn
+
+Row = Tuple[str, float, str]
+
+# Reduced model set sized for the 1-core container. MobileNet is omitted:
+# without batch-norm the depthwise stack does not train at toy scale
+# (documented deviation); ResNet18 and SqueezeNet cover the regular-conv
+# and fire/1x1 regimes.
+MODELS = {
+    "resnet18": (lambda: resnet18(8, 16, width=0.25), 16, 60),
+    "squeezenet": (lambda: squeezenet(8, 32, width=0.5), 32, 80),
+}
+NOISE = 0.8
+
+
+def _train(layers, params, x, y, steps: int = 60, lr: float = 0.05):
+    def loss_fn(p, xb, yb):
+        logits = cnn_forward(p, layers, xb)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        return (lse - tgt).mean()
+
+    @jax.jit
+    def step(p, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        gn = jnp.sqrt(sum(jnp.sum(v * v) for v in jax.tree.leaves(g)))
+        p = jax.tree.map(lambda w, gw: w - lr * gw / jnp.maximum(gn, 1.0),
+                         p, g)
+        return p, l
+
+    n = x.shape[0]
+    for i in range(steps):
+        idx = np.random.default_rng(i).permutation(n)[:32]
+        params, l = step(params, x[idx], y[idx])
+    return params
+
+
+def _acc(params, layers, x, y, quant_bits=0, pim=None, rng=None) -> float:
+    logits = cnn_forward(params, layers, x, quant_bits=quant_bits, pim=pim,
+                         rng=rng)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def run_table2() -> List[Row]:
+    rows: List[Row] = []
+    for name, (build, hw, steps) in MODELS.items():
+        layers = build()
+        xtr, ytr = synthetic_images(0, 192, hw, 8, noise=NOISE)
+        xte, yte = synthetic_images(1, 96, hw, 8, noise=NOISE)
+        xtr, xte = jnp.asarray(xtr), jnp.asarray(xte)
+        ytr, yte = jnp.asarray(ytr), jnp.asarray(yte)
+        params = init_cnn(layers, jax.random.PRNGKey(0))
+        params = _train(layers, params, xtr, ytr, steps=steps)
+        a_fp = _acc(params, layers, xte, yte)
+        a_i8 = _acc(params, layers, xte, yte, quant_bits=8)
+        a_i4 = _acc(params, layers, xte, yte, quant_bits=4)
+        # PIM passes are interpreter-heavy: evaluate on a subset
+        xs, ys = xte[:48], yte[:48]
+        a_pim = _acc(params, layers, xs, ys,
+                     pim=PimConfig(weight_bits=4, act_bits=4))
+        a_pim_analog = _acc(params, layers, xs, ys,
+                            pim=PimConfig(weight_bits=4, act_bits=4,
+                                          analog=True, adc_bits=5),
+                            rng=jax.random.PRNGKey(9))
+        rows += [
+            (f"table2.{name}.acc_fp32", a_fp, ""),
+            (f"table2.{name}.acc_int8", a_i8,
+             f"drop {a_fp - a_i8:+.3f} (paper: ~1%)"),
+            (f"table2.{name}.acc_int4", a_i4,
+             f"drop {a_fp - a_i4:+.3f} (paper: <=6%)"),
+            (f"table2.{name}.acc_pim_int4", a_pim,
+             f"vs int4 {a_pim - a_i4:+.3f} (exact datapath)"),
+            (f"table2.{name}.acc_pim_analog5b", a_pim_analog,
+             f"vs int4 {a_pim_analog - a_i4:+.3f} (5-bit ADC + noise)"),
+        ]
+    return rows
+
+
+def run_adc_ablation() -> List[Row]:
+    """Beyond-paper ablation: PIM analog-readout accuracy vs ADC resolution.
+
+    The paper fixes 5-bit ADCs (§IV.C.4) without sensitivity analysis;
+    this sweep shows where the knee is — validating (or challenging) that
+    design choice with the same noise model used everywhere else.
+    """
+    name = "resnet18"
+    build, hw, steps = MODELS["resnet18"]
+    layers = build()
+    xtr, ytr = synthetic_images(0, 192, hw, 8, noise=NOISE)
+    xte, yte = synthetic_images(1, 64, hw, 8, noise=NOISE)
+    xtr, xte = jnp.asarray(xtr), jnp.asarray(xte)
+    ytr, yte = jnp.asarray(ytr), jnp.asarray(yte)
+    params = init_cnn(layers, jax.random.PRNGKey(0))
+    params = _train(layers, params, xtr, ytr)
+    a_exact = _acc(params, layers, xte, yte,
+                   pim=PimConfig(weight_bits=4, act_bits=4))
+    rows: List[Row] = [(f"adc_ablation.{name}.exact", a_exact, "")]
+    for adc in (3, 4, 5, 6, 8):
+        a = _acc(params, layers, xte, yte,
+                 pim=PimConfig(weight_bits=4, act_bits=4, analog=True,
+                               adc_bits=adc), rng=jax.random.PRNGKey(9))
+        rows.append((f"adc_ablation.{name}.adc{adc}b", a,
+                     f"vs exact {a - a_exact:+.3f}"))
+    return rows

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (cleanup_old, latest_step,
+                                   restore_checkpoint, save_checkpoint)

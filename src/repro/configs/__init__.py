@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, get_config, list_archs, register

@@ -1,0 +1,17 @@
+"""OPIMA core: the paper's contribution as composable JAX modules.
+
+ - arch/cell: OPCM device + memory-organization models (Fig. 2 DSE)
+ - pim: the bit-sliced PIM matmul datapath (exact + analog modes)
+ - mapping/perfmodel: CNN->subarray mapping + latency/energy/power analyzer
+ - baselines: comparison-platform models (Figs. 10-12)
+ - workloads: Table-II CNN layer specs
+"""
+from repro.core.arch import DEFAULT_ARCH, OpimaArch
+from repro.core.cell import CellDesign, DEFAULT_CELL, best_design, design_space
+from repro.core.pim import (DEFAULT_PIM, PimConfig, pim_linear, pim_matmul,
+                            prepare_weights, reference_quantized_matmul)
+from repro.core.perfmodel import (NetworkPerf, best_grouping, grouping_sweep,
+                                  network_perf, power_breakdown_w,
+                                  total_power_w)
+from repro.core.baselines import (ALL_PLATFORMS, PAPER_RATIOS, average_ratios,
+                                  comparison_table)

@@ -1,0 +1,174 @@
+"""OPCM cell transmission model + design-space exploration (paper §IV.A, Fig. 2).
+
+The paper models a 2 µm-long GST patch on a silicon waveguide:
+
+    T_out = T_in − ΔT_s − P_abs          (all in dB; eq. 2)
+
+where ΔT_s is transmission change from scattering/back-reflection at the
+GST facets and P_abs is absorption in the film. The DSE sweeps GST (width,
+thickness); the chosen point (w=0.48 µm, t=20 nm) gives ΔT_s < 5% in both
+states and amorphous↔crystalline contrast ΔT ≈ 96%, enabling 16 transmission
+levels (4 bits/cell).
+
+We reproduce this with a physics-surrogate calibrated to the paper's numbers:
+
+* absorption: P_abs = 1 − exp(−Γ(w,t) · α · L) with α = 4πκ/λ and Γ(w,t) a
+  saturating mode-overlap (confinement) factor in the thin film;
+* scattering: facet index-mismatch Fresnel term scaled by a mode-mismatch
+  factor minimized near the fundamental-mode-matched width.
+
+GST optical constants at 1550 nm (literature values used by COMET [23]):
+  amorphous  n=3.94, κ=0.045;  crystalline n=6.11, κ=0.83.
+Intermediate crystallization fractions use a Lorentz-Lorenz effective-medium
+interpolation (linear in permittivity is adequate at this fidelity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LAMBDA_UM = 1.55          # C-band
+CELL_LENGTH_UM = 2.0      # paper §IV.A
+N_WG = 2.4                # effective index of SOI strip waveguide mode
+N_GST_AM, K_GST_AM = 3.94, 0.02   # thin-film amorphous GST @1550nm
+N_GST_CR, K_GST_CR = 6.11, 0.83
+
+# Calibrated surrogate constants (fit so the paper's design point
+# (w=0.48um, t=20nm) yields dTs<5% both states and contrast ~96%).
+_GAMMA_SAT = 0.357        # confinement saturation (crystalline-index mode pull)
+_GAMMA_T0_NM = 11.0       # thickness scale of confinement saturation
+_GAMMA_W0_UM = 0.35       # width scale (fast saturation past single-mode w)
+_GAMMA_INDEX_POW = 3.0    # mode pull-up into film grows with film index
+_SCATTER_BASE = 0.035     # crystalline facet scattering at the design point
+_SCATTER_WIDTH_UM = 0.48  # mode-matched width (minimum of scattering)
+_SCATTER_W_CURV = 20.0    # scattering growth away from matched width
+_SCATTER_T_POW = 3.2      # scattering growth with thickness (t/20nm)^pow
+_MULTIMODE_ONSET_UM = 0.52  # amorphous-state multimode scattering onset
+_MULTIMODE_SCALE_UM = 0.02
+_FRESNEL_CR = ((N_GST_CR - N_WG) / (N_GST_CR + N_WG)) ** 2
+
+
+def _effective_index(frac_cryst: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Effective-medium (linear-in-permittivity) n, kappa at crystallization
+    fraction ``frac_cryst`` in [0, 1]."""
+    eps_am = (N_GST_AM + 1j * K_GST_AM) ** 2
+    eps_cr = (N_GST_CR + 1j * K_GST_CR) ** 2
+    eps = eps_am + frac_cryst * (eps_cr - eps_am)
+    nk = jnp.sqrt(eps)
+    return jnp.real(nk), jnp.imag(nk)
+
+
+def confinement(width_um: jax.Array, thickness_nm: jax.Array,
+                n_gst: jax.Array) -> jax.Array:
+    """Mode overlap Γ(w, t) of the waveguide mode with the GST film.
+
+    Higher film index pulls the mode up into the film, so Γ scales with
+    (n/n_cr)^p — this is what makes the crystalline state strongly absorbing
+    while the amorphous state stays nearly transparent."""
+    t_term = 1.0 - jnp.exp(-thickness_nm / _GAMMA_T0_NM)
+    w_term = 1.0 - jnp.exp(-width_um / _GAMMA_W0_UM)
+    index_term = (n_gst / N_GST_CR) ** _GAMMA_INDEX_POW
+    return _GAMMA_SAT * t_term * w_term * index_term
+
+
+def scattering_loss(width_um: jax.Array, thickness_nm: jax.Array,
+                    n_gst: jax.Array) -> jax.Array:
+    """ΔT_s: fraction of power lost to scattering/back-reflection."""
+    fresnel = ((n_gst - N_WG) / (n_gst + N_WG)) ** 2 / _FRESNEL_CR
+    w_mismatch = 1.0 + _SCATTER_W_CURV * (
+        (width_um - _SCATTER_WIDTH_UM) / _SCATTER_WIDTH_UM) ** 2
+    t_growth = (thickness_nm / 20.0) ** _SCATTER_T_POW
+    # Wider waveguides go multimode: the low-index (amorphous) state scatters
+    # into higher-order modes past the onset width.
+    multimode = 1.0 + jnp.where(
+        n_gst < 0.5 * (N_GST_AM + N_GST_CR),
+        jnp.exp((width_um - _MULTIMODE_ONSET_UM) / _MULTIMODE_SCALE_UM), 0.0)
+    return jnp.clip(_SCATTER_BASE * fresnel * w_mismatch * t_growth * multimode,
+                    0.0, 1.0)
+
+
+def absorption(width_um: jax.Array, thickness_nm: jax.Array,
+               n: jax.Array, kappa: jax.Array) -> jax.Array:
+    """P_abs: fraction of power absorbed in the film over the cell length."""
+    alpha_per_um = 4.0 * jnp.pi * kappa / LAMBDA_UM
+    gamma = confinement(width_um, thickness_nm, n)
+    return 1.0 - jnp.exp(-gamma * alpha_per_um * CELL_LENGTH_UM)
+
+
+def transmission(width_um: jax.Array, thickness_nm: jax.Array,
+                 frac_cryst: jax.Array) -> jax.Array:
+    """T_out/T_in of the cell at crystallization fraction ``frac_cryst``
+    (eq. 2 in linear units)."""
+    n, k = _effective_index(frac_cryst)
+    dts = scattering_loss(width_um, thickness_nm, n)
+    pabs = absorption(width_um, thickness_nm, n, k)
+    return jnp.clip(1.0 - dts - pabs, 0.0, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellDesign:
+    width_um: float = 0.48
+    thickness_nm: float = 20.0
+
+    def levels(self, n_levels: int = 16) -> jax.Array:
+        """The ``n_levels`` programmable transmissions (equally spaced in
+        crystallization fraction; level 0 = crystalline = lowest T so that
+        code 0 -> minimum transmitted amplitude)."""
+        fracs = 1.0 - jnp.arange(n_levels, dtype=jnp.float32) / (n_levels - 1)
+        return transmission(jnp.asarray(self.width_um),
+                            jnp.asarray(self.thickness_nm), fracs)
+
+    def contrast(self) -> jax.Array:
+        """ΔT = T_amorphous − T_crystalline (Fig. 2(c) figure of merit)."""
+        w = jnp.asarray(self.width_um)
+        t = jnp.asarray(self.thickness_nm)
+        return transmission(w, t, jnp.asarray(0.0)) - transmission(
+            w, t, jnp.asarray(1.0))
+
+    def scatter_change(self, crystalline: bool) -> jax.Array:
+        """ΔT_s in the given state (Fig. 2(a)/(b) figure of merit)."""
+        frac = 1.0 if crystalline else 0.0
+        n, _ = _effective_index(jnp.asarray(frac))
+        return scattering_loss(jnp.asarray(self.width_um),
+                               jnp.asarray(self.thickness_nm), n)
+
+    def level_noise_sigma(self) -> float:
+        """Relative read-noise sigma implied by residual scattering: the
+        paper budgets ΔT_s as the read-error source; we treat the worst-state
+        ΔT_s spread across 3 sigma as the transmission uncertainty."""
+        worst = float(jnp.maximum(self.scatter_change(True),
+                                  self.scatter_change(False)))
+        return worst / 3.0
+
+
+def design_space(widths_um: jax.Array, thicknesses_nm: jax.Array):
+    """Full Fig. 2 sweep. Returns (dTs_cryst, dTs_amorph, contrast) grids of
+    shape (len(widths), len(thicknesses))."""
+    w = widths_um[:, None]
+    t = thicknesses_nm[None, :]
+    n_cr, _ = _effective_index(jnp.asarray(1.0))
+    n_am, _ = _effective_index(jnp.asarray(0.0))
+    dts_c = scattering_loss(w, t, n_cr)
+    dts_a = scattering_loss(w, t, n_am)
+    contrast = transmission(w, t, jnp.asarray(0.0)) - transmission(
+        w, t, jnp.asarray(1.0))
+    return dts_c, dts_a, contrast
+
+
+def best_design(widths_um: jax.Array, thicknesses_nm: jax.Array,
+                dts_budget: float = 0.05):
+    """Pick the (width, thickness) maximizing contrast subject to
+    ΔT_s < budget in both states — the paper's selection rule ('X' in
+    Fig. 2(c))."""
+    dts_c, dts_a, contrast = design_space(widths_um, thicknesses_nm)
+    feasible = (dts_c < dts_budget) & (dts_a < dts_budget)
+    score = jnp.where(feasible, contrast, -jnp.inf)
+    idx = jnp.unravel_index(jnp.argmax(score), score.shape)
+    return (float(widths_um[idx[0]]), float(thicknesses_nm[idx[1]]),
+            float(contrast[idx]))
+
+
+DEFAULT_CELL = CellDesign()

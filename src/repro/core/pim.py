@@ -1,0 +1,223 @@
+"""The OPIMA PIM execution engine (paper §IV.C–D).
+
+This is the paper's datapath as a composable JAX op:
+
+  1. Weights are quantized (per-output-channel symmetric) and nibble-
+     decomposed into 4-bit planes — one OPCM cell per nibble (§IV.C.4 TDM).
+  2. Activations are dynamically quantized per row — the MDL array re-tunes
+     per driven vector (§IV.C.2) — and nibble-decomposed the same way.
+  3. Every (act-nibble, weight-nibble) plane pair is one "one-shot" array
+     multiply; partial products accumulate over the K (column/wavelength)
+     dimension — WDM in-waveguide interference.
+  4. The aggregation unit recombines planes with shift-and-add and rescales.
+
+Two fidelity modes:
+  * ``exact``  — bit-exact integer arithmetic (what the TPU deployment uses;
+    routed through the Pallas kernel, or its jnp-identical fallback).
+  * ``analog`` — models the physical readout: per-WDM-chunk photodetector
+    sums pass a transmission-noise + ADC-quantization stage before the
+    digital shift-and-add (accuracy-study mode; pure jnp).
+
+The same engine is used by the CNN reproduction workloads and as the
+serving-path matmul of the assigned LM architectures (weights stationary in
+"OPCM", activations driven — the paper's FC weight-stationary mapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import DEFAULT_ARCH, OpimaArch
+from repro.core.cell import DEFAULT_CELL
+from repro.quant.nibbles import num_nibbles, to_nibbles
+from repro.quant.quantize import QTensor, qmax, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class PimConfig:
+    """Operating point of the PIM engine."""
+    weight_bits: int = 4          # paper baseline: 4b (one cell per weight)
+    act_bits: int = 4
+    cell_bits: int = 4            # OPCM MLC density
+    adc_bits: int = 5             # aggregation-unit ADC resolution
+    wdm_chunk: int = 8            # products summed IN ANALOG before one ADC
+                                  # conversion. OPIMA uses wavelength-specific
+                                  # PDs (§IV.C.4), so in-waveguide interference
+                                  # accumulates only across the subarrays of a
+                                  # group sharing a wavelength (≈ kernel rows),
+                                  # not across the full K dimension.
+    analog: bool = False          # enable the analog readout model
+    read_noise_sigma: float = 0.0  # relative transmission read noise; if 0
+                                   # and analog, uses the cell-DSE implied one
+    use_pallas: bool = False      # route exact mode through the Pallas kernel
+    interpret: bool = True        # Pallas interpret mode (CPU container)
+
+    @property
+    def weight_planes(self) -> int:
+        return num_nibbles(self.weight_bits)
+
+    @property
+    def act_planes(self) -> int:
+        return num_nibbles(self.act_bits)
+
+
+DEFAULT_PIM = PimConfig()
+
+
+def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM) -> QTensor:
+    """Program a weight matrix into 'OPCM': per-output-channel symmetric
+    quantization. w: (K, N) -> QTensor with codes (K, N), scale (1, N)."""
+    assert w.ndim == 2, "prepare_weights expects (K, N)"
+    return quantize(w, bits=cfg.weight_bits, axis=(0,))
+
+
+def _plane_matmuls(a_planes: jax.Array, w_planes: jax.Array) -> jax.Array:
+    """All (act-plane, weight-plane) integer matmuls.
+
+    a_planes: (Pa, M, K) int8; w_planes: (Pw, K, N) int8.
+    Returns (Pa, Pw, M, N) int32 partial products.
+    """
+    return jnp.einsum("amk,wkn->awmn", a_planes.astype(jnp.int32),
+                      w_planes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def _shift_add(partials: jax.Array) -> jax.Array:
+    """Aggregation-unit recombination: sum_d sum_e partial[d,e] 16^(d+e).
+
+    Runs in int32. Intermediate shifted terms may exceed int32 range for
+    8-bit operands, but two's-complement wraparound addition is associative
+    and the *final* sum always fits (|code| <= 127, so |dot| <= 127^2*K),
+    so the result is exact — verified bit-for-bit against the un-sliced
+    oracle in tests.
+    """
+    pa, pw = partials.shape[0], partials.shape[1]
+    sh_a = 16 ** jnp.arange(pa, dtype=jnp.int32)
+    sh_w = 16 ** jnp.arange(pw, dtype=jnp.int32)
+    shifts = sh_a[:, None] * sh_w[None, :]
+    return jnp.tensordot(shifts, partials.astype(jnp.int32),
+                         axes=[[0, 1], [0, 1]])
+
+
+def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
+                          cfg: PimConfig, cell_noise_sigma: float,
+                          rng: Optional[jax.Array]) -> jax.Array:
+    """Analog readout model for the plane products.
+
+    Physical chain per WDM chunk of K:
+      product per wavelength  p_k = a_k * w_k          (cell modulation)
+      + multiplicative read noise on |p_k|             (ΔT_s residual)
+      photodetector sums the chunk                     (in-waveguide interf.)
+      5-bit ADC digitizes the chunk sum                (aggregation unit)
+    Chunk sums are then accumulated digitally (SRAM accumulator).
+    """
+    pa, m, k = a_planes.shape
+    pw, _, n = w_planes.shape
+    chunk = min(cfg.wdm_chunk, k)
+    pad = (-k) % chunk
+    if pad:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad)))
+        w_planes = jnp.pad(w_planes, ((0, 0), (0, pad), (0, 0)))
+    kc = (k + pad) // chunk
+    a_c = a_planes.reshape(pa, m, kc, chunk).astype(jnp.float32)
+    w_c = w_planes.reshape(pw, kc, chunk, n).astype(jnp.float32)
+    # chunk-local products summed by the photodetector:
+    chunk_sums = jnp.einsum("amcq,wcqn->awcmn", a_c, w_c)
+    if cell_noise_sigma > 0.0:
+        if rng is None:
+            raise ValueError("analog mode with noise requires an rng key")
+        # Multiplicative transmission noise enters per product; the summed
+        # noise power over a chunk scales with the RMS product magnitude.
+        prod_sq = jnp.einsum("amcq,wcqn->awcmn", a_c ** 2, w_c ** 2)
+        sigma = cell_noise_sigma * jnp.sqrt(prod_sq)
+        chunk_sums = chunk_sums + sigma * jax.random.normal(
+            rng, chunk_sums.shape, dtype=jnp.float32)
+    # 5-bit ADC with auto-ranged TIA gain: full-scale tracks the actual
+    # per-plane-pair signal envelope (calibrated transimpedance gain), the
+    # standard practice for analog-compute readout chains. ``adc_bits`` codes
+    # span [-full_scale, +full_scale].
+    full_scale = jnp.max(jnp.abs(chunk_sums), axis=(2, 3, 4), keepdims=True)
+    full_scale = jnp.maximum(jax.lax.stop_gradient(full_scale), 1e-6)
+    half_levels = float(2 ** (cfg.adc_bits - 1) - 1)
+    lsb = full_scale / half_levels
+    digitized = jnp.round(chunk_sums / lsb) * lsb
+    return jnp.sum(digitized, axis=2)  # digital accumulation over chunks
+
+
+def pim_matmul(x: jax.Array, w_q: QTensor, cfg: PimConfig = DEFAULT_PIM,
+               rng: Optional[jax.Array] = None,
+               act_scale_axis: int = -1) -> jax.Array:
+    """Matrix multiply through the OPIMA PIM datapath.
+
+    Args:
+      x: float activations, shape (..., K).
+      w_q: prepared weights (K, N) from :func:`prepare_weights`.
+      cfg: PIM operating point.
+      rng: PRNG key, required if ``cfg.analog`` and noise sigma > 0.
+      act_scale_axis: axis for dynamic activation scales (per-row default).
+
+    Returns:
+      float32 result of shape (..., N), de-quantized.
+    """
+    if cfg.weight_bits > 8 or cfg.act_bits > 8:
+        raise NotImplementedError(
+            "exact int32 shift-and-add supports operand widths <= 8 bits "
+            "(the paper evaluates 4b and 8b); wider operands would need an "
+            "int64/float accumulation path")
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    m = 1
+    for d in orig_shape[:-1]:
+        m *= d
+    x2 = x.reshape(m, k)
+
+    a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))
+    a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K)
+    w_planes = to_nibbles(w_q.values, w_q.bits)            # (Pw, K, N)
+
+    if cfg.analog:
+        sigma = cfg.read_noise_sigma
+        if sigma == 0.0:
+            sigma = DEFAULT_CELL.level_noise_sigma()
+        partials = _analog_plane_matmuls(a_planes, w_planes, cfg, sigma, rng)
+        # float shift-and-add (values are no longer exact integers)
+        pa, pw = partials.shape[0], partials.shape[1]
+        sh = (16.0 ** jnp.arange(pa))[:, None] * (16.0 ** jnp.arange(pw))[None]
+        acc = jnp.tensordot(sh.astype(jnp.float32), partials,
+                            axes=[[0, 1], [0, 1]])
+    elif cfg.use_pallas:
+        from repro.kernels.pim_matmul import ops as pim_ops
+        acc = pim_ops.pim_matmul_int(a_planes, w_planes,
+                                     interpret=cfg.interpret)
+    else:
+        acc = _shift_add(_plane_matmuls(a_planes, w_planes))
+
+    out = acc.astype(jnp.float32) * a_q.scale * w_q.scale
+    return out.reshape(orig_shape[:-1] + (w_q.values.shape[-1],))
+
+
+def pim_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+               cfg: PimConfig = DEFAULT_PIM,
+               rng: Optional[jax.Array] = None) -> jax.Array:
+    """Float-weight convenience wrapper: quantize-on-the-fly + PIM matmul."""
+    y = pim_matmul(x, prepare_weights(w, cfg), cfg, rng)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def reference_quantized_matmul(x: jax.Array, w_q: QTensor,
+                               cfg: PimConfig = DEFAULT_PIM) -> jax.Array:
+    """Oracle: plain int32 matmul of the quantized codes (no nibble
+    decomposition). Exact-mode PIM must match this bit-for-bit."""
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))
+    acc = jnp.einsum("mk,kn->mn", a_q.values.astype(jnp.int32),
+                     w_q.values.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * a_q.scale * w_q.scale
+    return out.reshape(orig_shape[:-1] + (w_q.values.shape[-1],))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, LMDataIterator, lm_batch,
+                                 synthetic_images, synthetic_tokens)

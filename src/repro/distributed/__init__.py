@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (ShardingContext, constrain,
+                                        current_context, logical_rules,
+                                        param_spec_for_path, use_sharding)

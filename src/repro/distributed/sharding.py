@@ -1,0 +1,141 @@
+"""Distribution substrate: mesh axes, sharding rules, activation constraints.
+
+Axis convention (DESIGN.md §5):
+  pod    — outermost data-parallel axis across pods (gradient all-reduce
+           crosses pod links once per step)
+  data   — data parallel within a pod; also shards long-context KV caches
+           (sequence dimension) when batch == 1
+  model  — tensor parallel: attention heads, FFN hidden, vocab; MoE experts
+           (expert parallel reuses this axis, DeepSeek-style)
+
+Models stay sharding-agnostic: they call :func:`constrain` with a *logical*
+spec name; the launcher installs a :class:`ShardingContext` that maps
+logical names to ``PartitionSpec``s for the active mesh. Without a context
+(unit tests, single CPU) everything is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DATA_AXES = ("pod", "data")     # combined batch axes when pod is present
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def logical_rules(mesh: Mesh, seq_shard: bool = False) -> Dict[str, P]:
+    """Logical activation/param spec table for the given mesh.
+
+    seq_shard: shard the sequence dim of KV caches / activations on 'data'
+    (long-context decode with batch=1)."""
+    b = _batch_axes(mesh)
+    batch = b if b else None
+    rules = {
+        # activations
+        "act_btd": P(batch, None, None),            # (batch, seq, d)
+        "act_btf": P(batch, None, "model"),         # ffn hidden
+        "act_bthd": P(batch, None, "model", None),  # per-head activations
+        "act_bthd_hd": P(batch, None, None, "model"),  # head_dim-sharded
+        "act_btv": P(batch, None, "model"),         # logits (vocab sharded)
+        "kv_cache": P(batch, None, "model", None),  # (batch, seq, kv, hd)
+        "kv_cache_hd": P(batch, None, None, "model"),  # MQA: shard head_dim
+        # decode-time caches: shard the SEQUENCE dim on 'model' (flash-
+        # decode): scores/value contractions stay local per shard and only
+        # softmax statistics cross the ICI. batch=1 long-context also folds
+        # 'data' into the sequence sharding.
+        "kv_cache_decode": P(batch, "model", None, None),
+        "kv_cache_decode_b1": P(None, ("data", "model"), None, None),
+        "ssm_state": P(batch, "model", None, None),  # (batch, heads, n, p)
+        "ssm_state_hd": P(batch, None, None, "model"),
+        # params
+        "emb_vd": P("model", None),
+        "w_dh": P(None, "model"),                   # d_model -> heads*hd / ff
+        "w_hd": P("model", None),                   # heads*hd / ff -> d_model
+        "bias_h": P("model"),
+        "bias_d": P(None),
+        "norm_d": P(None),
+        "moe_edf": P("model", None, None),          # experts sharded (EP)
+        "moe_efd": P("model", None, None),
+        "replicated": P(),
+    }
+    return rules
+
+
+class ShardingContext:
+    def __init__(self, mesh: Mesh, seq_shard: bool = False):
+        self.mesh = mesh
+        self.rules = logical_rules(mesh, seq_shard=seq_shard)
+        self.seq_shard = seq_shard
+
+    def spec(self, name: str) -> P:
+        return self.rules[name]
+
+    def sharding(self, name: str) -> NamedSharding:
+        return NamedSharding(self.mesh, self.rules[name])
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingContext]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply a logical sharding constraint if a context is active."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = ctx.rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def mesh_axis_size(axis: str) -> int:
+    ctx = current_context()
+    if ctx is None or axis not in ctx.mesh.axis_names:
+        return 1
+    return ctx.mesh.shape[axis]
+
+
+def param_spec_for_path(path: str, rules: Dict[str, P]) -> P:
+    """Map a parameter tree path to a PartitionSpec by naming convention.
+
+    Conventions (see models/*): names ending in
+      '_vd'  -> vocab/embedding table      '_dh' -> col-parallel matmul
+      '_hd'  -> row-parallel matmul        '_edf'/'_efd' -> expert stacks
+      '_bh'  -> col-parallel bias          everything else -> replicated
+    A leading layer-stack dimension (scan-over-layers) shifts specs right.
+    """
+    leaf = path.split("/")[-1]
+    stacked = leaf.startswith("s_")       # scanned layer stacks: 's_' prefix
+    if stacked:
+        leaf = leaf[2:]
+    for suffix, key in (("_vd", "emb_vd"), ("_dh", "w_dh"), ("_hd", "w_hd"),
+                        ("_edf", "moe_edf"), ("_efd", "moe_efd"),
+                        ("_bh", "bias_h")):
+        if leaf.endswith(suffix):
+            spec = rules[key]
+            if stacked:
+                return P(*((None,) + tuple(spec)))
+            return spec
+    if stacked:
+        return P(None)
+    return P()

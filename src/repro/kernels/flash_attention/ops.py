@@ -1,0 +1,21 @@
+"""Dispatching wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    prefix_len: int = 0, backend: str = "pallas",
+                    bq: int = 512, bk: int = 512) -> jax.Array:
+    if backend == "pallas":
+        return flash_attention_pallas(q, k, v, causal, window, prefix_len,
+                                      bq=bq, bk=bk, interpret=False)
+    if backend == "pallas_interp":
+        return flash_attention_pallas(q, k, v, causal, window, prefix_len,
+                                      bq=bq, bk=bk, interpret=True)
+    return flash_attention_ref(q, k, v, causal, window, prefix_len)

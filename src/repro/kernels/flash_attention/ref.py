@@ -1,0 +1,31 @@
+"""Oracle for the flash-attention kernel: plain masked SDPA in f32."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0,
+                        prefix_len: int = 0) -> jax.Array:
+    """q: (b, s, h, d), k/v: (b, s, kv, d) -> (b, s, h, d)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, d).astype(jnp.float32)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    ok = (qp >= kp) if causal else jnp.ones((s, s), bool)
+    ok |= kp < prefix_len
+    if window > 0:
+        ok &= ((qp - kp) < window) | (kp < prefix_len)
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkd->bskrd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

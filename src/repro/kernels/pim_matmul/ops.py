@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the PIM matmul kernel.
+
+``pim_matmul_int`` is the integer-plane entry point used by the PIM engine;
+``pim_matmul_quantized`` is the end-to-end float API (quantize -> planes ->
+kernel -> dequantize) used by serving layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pim_matmul.pim_matmul import pim_matmul_pallas
+from repro.kernels.pim_matmul.ref import pim_matmul_ref
+from repro.quant.nibbles import to_nibbles
+from repro.quant.quantize import QTensor, quantize
+
+
+def pim_matmul_int(a_planes: jax.Array, w_planes: jax.Array,
+                   interpret: bool = True, use_ref: bool = False
+                   ) -> jax.Array:
+    """(Pa, M, K) x (Pw, K, N) nibble planes -> (M, N) int32."""
+    if use_ref:
+        return pim_matmul_ref(a_planes, w_planes)
+    return pim_matmul_pallas(a_planes, w_planes, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("weight_bits", "act_bits", "interpret"))
+def pim_matmul_quantized(x: jax.Array, w_q_values: jax.Array,
+                         w_q_scale: jax.Array, weight_bits: int = 4,
+                         act_bits: int = 4, interpret: bool = True
+                         ) -> jax.Array:
+    """Float (..., K) x quantized (K, N) -> float (..., N) via the kernel."""
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    a_q = quantize(x2, bits=act_bits, axis=(1,))
+    a_planes = to_nibbles(a_q.values, act_bits)
+    w_planes = to_nibbles(w_q_values, weight_bits)
+    acc = pim_matmul_int(a_planes, w_planes, interpret=interpret)
+    out = acc.astype(jnp.float32) * a_q.scale * w_q_scale
+    return out.reshape(orig[:-1] + (w_q_values.shape[-1],))

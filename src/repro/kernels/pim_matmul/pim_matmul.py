@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: OPIMA bit-sliced (nibble-plane) integer matmul.
+
+This is the paper's PIM datapath adapted to the TPU memory hierarchy
+(DESIGN.md §2): weight nibbles live in VMEM tiles (the "subarray"), each
+(act-plane, weight-plane) pair is a one-shot MXU matmul over the K block
+(the "WDM accumulation"), and the shift-and-add recombination (the
+"aggregation unit") happens in the int32 VMEM accumulator.
+
+Tiling:
+  grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis so each
+  (m, n) output tile accumulates across K steps in a VMEM scratch
+  accumulator, written out on the last K step. Plane pairs are unrolled
+  inside the kernel body (Pa, Pw <= 2 in practice: 4b/8b operands).
+
+VMEM budget per step (bm=bn=128, bk=512, Pa=Pw=2):
+  a tile 2*128*512 B + w tile 2*512*128 B + acc 128*128*4 B ~= 0.33 MiB,
+  comfortably inside the ~16 MiB VMEM of a TPU v5e core, leaving room for
+  double-buffered prefetch of the next K tiles.
+
+dot dims are (128, 512) x (512, 128) — MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pim_matmul_kernel(a_ref, w_ref, o_ref, acc_ref, *, n_k: int,
+                       pa: int, pw: int):
+    """One (m, n, k) grid step.
+
+    a_ref: (Pa, bm, bk) int8  — activation nibble planes tile
+    w_ref: (Pw, bk, bn) int8  — weight nibble planes tile
+    o_ref: (bm, bn) int32     — output tile (written at last k step)
+    acc_ref: (bm, bn) int32   — VMEM accumulator scratch
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = acc_ref[...]
+    # Unrolled plane pairs: each is one MXU int matmul + a static shift.
+    for d in range(pa):
+        a_pl = a_ref[d].astype(jnp.int32)
+        for e in range(pw):
+            w_pl = w_ref[e].astype(jnp.int32)
+            partial = jax.lax.dot_general(
+                a_pl, w_pl, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc = acc + partial * (16 ** (d + e))
+    acc_ref[...] = acc
+
+    @pl.when(k_step == n_k - 1)
+    def _write_out():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pim_matmul_pallas(a_planes: jax.Array, w_planes: jax.Array,
+                      bm: int = 128, bn: int = 128, bk: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """Bit-sliced integer matmul via pallas_call.
+
+    Args:
+      a_planes: (Pa, M, K) int8 nibble planes of the activations.
+      w_planes: (Pw, K, N) int8 nibble planes of the weights.
+      bm/bn/bk: VMEM tile sizes (MXU-aligned).
+      interpret: run in interpreter mode (CPU validation).
+
+    Returns:
+      (M, N) int32 — bit-exact vs. ref.pim_matmul_ref.
+    """
+    pa, m, k = a_planes.shape
+    pw, k2, n = w_planes.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    # pad to tile multiples (zero padding is exact for integer matmul)
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    if pad_m or pad_k:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_planes = jnp.pad(w_planes, ((0, 0), (0, pad_k), (0, pad_n)))
+    mp, kp, np_ = m + pad_m, k + pad_k, n + pad_n
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_pim_matmul_kernel, n_k=n_k, pa=pa, pw=pw),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((pa, bm, bk), lambda i, j, s: (0, i, s)),
+            pl.BlockSpec((pw, bk, bn), lambda i, j, s: (0, s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        # int32 accumulator tile, persistent across the sequential K axis
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_planes, w_planes)
+    return out[:m, :n]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the PIM bit-sliced matmul kernel.
+
+Given nibble planes a_planes (Pa, M, K) int8 and w_planes (Pw, K, N) int8
+(signed digits in [-15, 15], LSB-first base-16), the reference computes
+
+    out[m, n] = sum_d sum_e 16^(d+e) * sum_k a_planes[d,m,k] * w_planes[e,k,n]
+
+in int32 — exactly the OPIMA aggregation-unit semantics (one-shot nibble
+products + shift-and-add). The kernel must match this bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pim_matmul_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray
+                   ) -> jnp.ndarray:
+    pa = a_planes.shape[0]
+    pw = w_planes.shape[0]
+    partials = jnp.einsum("amk,wkn->awmn", a_planes.astype(jnp.int32),
+                          w_planes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+    sh = (16 ** jnp.arange(pa, dtype=jnp.int32))[:, None] * \
+         (16 ** jnp.arange(pw, dtype=jnp.int32))[None, :]
+    return jnp.tensordot(sh, partials, axes=[[0, 1], [0, 1]])

@@ -1,0 +1,32 @@
+"""Public wrapper for the SSD scan kernel with CPU/TPU dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 128, backend: str = "chunked"
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan; ``backend``:
+      'pallas'      — TPU kernel (interpret=False)
+      'pallas_interp' — kernel under the interpreter (CPU validation)
+      'chunked'     — pure-jnp chunk-parallel (XLA; default on CPU, and the
+                      form XLA:TPU also compiles well for the dry-run)
+      'sequential'  — naive scan oracle
+    """
+    l = x.shape[1]
+    chunk = min(chunk, l)
+    if l % chunk != 0:
+        backend = "sequential" if backend != "sequential" else backend
+    if backend == "pallas":
+        return ssd_scan_pallas(x, a, b, c, chunk=chunk, interpret=False)
+    if backend == "pallas_interp":
+        return ssd_scan_pallas(x, a, b, c, chunk=chunk, interpret=True)
+    if backend == "chunked":
+        return ssd_chunked_ref(x, a, b, c, chunk=chunk)
+    return ssd_scan_ref(x, a, b, c)

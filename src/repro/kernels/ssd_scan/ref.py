@@ -1,0 +1,88 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Sequential recurrence, per (batch*head):
+
+    S_t = a_t * S_{t-1} + b_t ⊗ x_t          S in R^{N x P}
+    y_t = c_t @ S_t
+
+where a_t in (0, 1] is the per-step decay (exp(Δ·A) after discretization),
+x_t in R^P is the Δ-scaled input, b_t, c_t in R^N are the input/output
+projections (B, C in SSM terms). The chunked Pallas kernel must match this
+to float32 tolerance (different reassociation).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                 s0: jax.Array | None = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Args:
+      x: (BH, L, P) inputs; a: (BH, L) decays; b, c: (BH, L, N).
+      s0: optional (BH, N, P) initial state.
+    Returns: y (BH, L, P), final state (BH, N, P).
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((bh, n, p), dtype=jnp.float32)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = at[:, None, None] * s + bt[:, :, None] * xt[:, None, :]
+        y = jnp.einsum("zn,znp->zp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def ssd_chunked_ref(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                    chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel formulation in pure jnp (the algorithm the Pallas
+    kernel implements) — used to cross-check the math independently.
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    xc = x.reshape(bh, nc, chunk, p)
+    ac = a.reshape(bh, nc, chunk)
+    bc = b.reshape(bh, nc, chunk, n)
+    cc = c.reshape(bh, nc, chunk, n)
+
+    la = jnp.log(jnp.maximum(ac, 1e-37))
+    cl = jnp.cumsum(la, axis=-1)                        # inclusive
+    seg = jnp.exp(cl[..., :, None] - cl[..., None, :])  # (bh,nc,Q,Q)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    lmat = jnp.where(mask, seg, 0.0)
+
+    scores = jnp.einsum("zcin,zcjn->zcij", cc, bc) * lmat
+    y_intra = jnp.einsum("zcij,zcjp->zcip", scores, xc)
+
+    # per-chunk state contribution and carry
+    decay_to_end = jnp.exp(cl[..., -1:] - cl)           # (bh,nc,Q)
+    chunk_states = jnp.einsum("zcj,zcjn,zcjp->zcnp", decay_to_end, bc, xc)
+    chunk_decay = jnp.exp(cl[..., -1])                  # (bh,nc)
+
+    def carry_fn(s, inp):
+        cs, cd = inp
+        s_out = s
+        s = cd[:, None, None] * s + cs
+        return s, s_out
+
+    s0 = jnp.zeros((bh, n, p), dtype=jnp.float32)
+    s_fin, s_starts = jax.lax.scan(
+        carry_fn, s0, (jnp.moveaxis(chunk_states, 1, 0),
+                       jnp.moveaxis(chunk_decay, 1, 0)))
+    s_starts = jnp.moveaxis(s_starts, 0, 1)             # (bh,nc,n,p)
+
+    y_inter = jnp.einsum("zci,zcin,zcnp->zcip", jnp.exp(cl), cc, s_starts)
+    y = (y_intra + y_inter).reshape(bh, l, p)
+    return y, s_fin

@@ -1,0 +1,472 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, AOT-lower and compile the
+train/serve step against ShapeDtypeStruct stand-ins (no allocation) on
+
+  * the single-pod production mesh 16x16 ('data','model')  = 256 chips
+  * the multi-pod mesh 2x16x16 ('pod','data','model')      = 512 chips
+
+and record memory_analysis / cost_analysis / HLO-collective bytes into
+experiments/dryrun/<arch>__<shape>__<mesh>.json — the §Roofline inputs.
+
+Shapes (per assignment): train_4k (train_step), prefill_32k,
+decode_32k, long_500k (decode; sub-quadratic archs only — see DESIGN §4).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape train_4k --mesh pod           # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config
+from repro.distributed.sharding import ShardingContext, use_sharding
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import (batch_shardings, init_state, lm_loss,
+                                make_train_step, param_shardings,
+                                state_shardings)
+from repro.models.lm import decode_step, forward, init_cache, init_lm
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+# TPU v5e constants for the roofline terms
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention architecture: no sub-quadratic path "
+                       "for 524k context (DESIGN.md §4)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    kind = info["kind"]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def sd(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if kind == "train":
+        if cfg.encoder_layers:                       # enc-dec split
+            half = s // 2
+            return {"tokens": sd((b, half), i32),
+                    "targets": sd((b, half), i32),
+                    "frames": sd((b, half, cfg.d_model), f32)}
+        if cfg.vision_tokens:
+            text = s - cfg.vision_tokens
+            return {"tokens": sd((b, text), i32),
+                    "targets": sd((b, text), i32),
+                    "patches": sd((b, cfg.vision_tokens, cfg.vision_dim),
+                                  f32)}
+        return {"tokens": sd((b, s), i32), "targets": sd((b, s), i32)}
+    if kind == "prefill":
+        if cfg.encoder_layers:
+            half = s // 2
+            return {"tokens": sd((b, half), i32),
+                    "frames": sd((b, half, cfg.d_model), f32)}
+        if cfg.vision_tokens:
+            return {"tokens": sd((b, s - cfg.vision_tokens), i32),
+                    "patches": sd((b, cfg.vision_tokens, cfg.vision_dim),
+                                  f32)}
+        return {"tokens": sd((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    return {"token": sd((b, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    enc_len = s // 2 if cfg.encoder_layers else 0
+    dec_len = s // 2 if cfg.encoder_layers else s
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, b, dec_len, enc_len=enc_len))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# sharding for serve-side trees
+# ---------------------------------------------------------------------------
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_tpl, seq_shard: bool):
+    from repro.launch.train import fit_spec
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(path, leaf):
+        name = getattr(path[-1], "key", "")
+        # leading dim is the layer stack
+        if name in ("k", "v", "xk", "xv"):
+            kv_div = cfg.num_kv_heads % mesh.shape["model"] == 0
+            if seq_shard:
+                p = P(None, None, ("data", "model"), None, None)
+            elif kv_div:
+                p = P(None, b_axes, None, "model", None)
+            else:
+                p = P(None, b_axes, "model", None, None)
+        elif name == "state":
+            p = P(None, b_axes, "model", None, None)
+        elif name == "conv_tail":
+            p = P(None, b_axes, None, "model")
+        else:
+            p = P()
+        return NamedSharding(mesh, fit_spec(mesh, p, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tpl)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+
+
+def _shape_bytes(segment: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(segment):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand sizes of every collective op in the (compiled,
+    post-SPMD) HLO. Parses instruction lines of the form
+      %name = <output shape(s)> <opcode>(operands...), ...
+    Note: ops inside while-loop (scan) bodies appear once — callers
+    extrapolate with the trip count (see _measure_roofline)."""
+    totals: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for op in _OPS:
+            idx = line.find(" " + op + "(")
+            if idx < 0:
+                idx = line.find(" " + op + "-start(")
+            if idx < 0:
+                continue
+            eq = line.find("=")
+            if eq < 0 or eq > idx:
+                continue
+            nbytes = _shape_bytes(line[eq + 1:idx])
+            totals[op] = totals.get(op, 0.0) + nbytes
+            totals["total"] = totals.get("total", 0.0) + nbytes
+            break
+    return totals
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": bytes_hbm / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW),
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """6·N_active·D for train; 2·N_active·D for forward-only shapes."""
+    info = SHAPES[shape]
+    # active params ~= embedding + layers (MoE: only routed top-k + shared)
+    d = cfg.d_model
+    per_layer = 0
+    if cfg.block_type in ("attn", "hybrid"):
+        per_layer += d * (cfg.num_heads + 2 * cfg.num_kv_heads) * \
+            cfg.head_dim + cfg.num_heads * cfg.head_dim * d
+    if cfg.block_type in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * d
+        per_layer += 2 * d * d_inner + d_inner * d + \
+            2 * d * cfg.ssm_groups * cfg.ssm_state
+    if cfg.is_moe:
+        per_layer += 3 * d * cfg.moe_d_ff * (cfg.experts_per_token +
+                                             cfg.shared_experts)
+    elif cfg.d_ff:
+        per_layer += (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+    n_active = cfg.num_layers * per_layer + cfg.vocab_size * d
+    if cfg.encoder_layers:
+        n_active += cfg.encoder_layers * per_layer
+    if info["kind"] == "train":
+        tokens = info["seq_len"] * info["global_batch"]
+        return 6.0 * n_active * tokens
+    if info["kind"] == "prefill":
+        tokens = info["seq_len"] * info["global_batch"]
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * info["global_batch"]     # decode: 1 token/seq
+
+
+# ---------------------------------------------------------------------------
+# the dry run itself
+# ---------------------------------------------------------------------------
+def _compile_cell(cfg: ModelConfig, shape: str, mesh: Mesh, seq_shard: bool):
+    """Lower + compile one cell; returns (compiled, per-step metrics dict).
+
+    cost_analysis / collective parsing see scan (while-loop) bodies ONCE;
+    callers correct with the trip count via L-extrapolation.
+    """
+    info = SHAPES[shape]
+    kind = info["kind"]
+    ctx = ShardingContext(mesh, seq_shard=seq_shard)
+    with use_sharding(ctx):
+        cfg_run = dataclasses.replace(cfg, remat=(kind == "train"),
+                                      ssd_backend="chunked")
+        params_tpl = jax.eval_shape(
+            lambda: init_lm(cfg_run, jax.random.PRNGKey(0)))
+        params_tpl = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+            if x.dtype == jnp.float32 else x, params_tpl)
+        p_shard = param_shardings(mesh, params_tpl, seq_shard)
+        ins = input_specs(cfg_run, shape)
+        in_shard = batch_shardings(mesh, ins)
+
+        if kind == "train":
+            opt_tpl = AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                mu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+                    x.shape, jnp.float32), params_tpl),
+                nu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+                    x.shape, jnp.float32), params_tpl))
+            state_tpl = {"params": params_tpl, "opt": opt_tpl,
+                         "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            st_shard = state_shardings(mesh, state_tpl)
+            step_fn = make_train_step(cfg_run, AdamWConfig())
+            jitted = jax.jit(step_fn, in_shardings=(st_shard, in_shard),
+                             out_shardings=(st_shard, None))
+            with mesh:
+                lowered = jitted.lower(state_tpl, ins)
+        elif kind == "prefill":
+            from repro.models.lm import prefill as prefill_fn
+            max_len = (info["seq_len"] // 2 if cfg.encoder_layers
+                       else info["seq_len"])
+
+            def pf(params, batch):
+                return prefill_fn(params, cfg_run, batch, max_len=max_len)
+            jitted = jax.jit(pf, in_shardings=(p_shard, in_shard))
+            with mesh:
+                lowered = jitted.lower(params_tpl, ins)
+        else:  # decode
+            cache_tpl = cache_specs(cfg_run, shape)
+            c_shard = cache_shardings(mesh, cfg_run, cache_tpl, seq_shard)
+
+            def dec(params, cache, token, index):
+                return decode_step(params, cfg_run, cache, token, index,
+                                   seq_shard=seq_shard)
+            jitted = jax.jit(
+                dec, in_shardings=(p_shard, c_shard, in_shard["token"],
+                                   None),
+                out_shardings=(None, c_shard))
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            with mesh:
+                lowered = jitted.lower(params_tpl, cache_tpl, ins["token"],
+                                       idx)
+
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        mem = compiled.memory_analysis()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll,
+            "mem": {
+                "argument_size_bytes": getattr(mem,
+                                               "argument_size_in_bytes", 0),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+        }
+
+
+def _with_layers(cfg: ModelConfig, n: int) -> ModelConfig:
+    """Shrink the stack to n layers AND unroll the layer scan: XLA's
+    cost_analysis counts while-loop bodies once regardless of trip count,
+    so roofline metrics are measured on unrolled L=2 / L=4 variants and
+    extrapolated linearly (layers are homogeneous)."""
+    kw = {"num_layers": n, "unroll_layers": True}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n
+    if cfg.global_every:
+        kw["global_every"] = min(cfg.global_every, max(2, n))
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             save: bool = True, verbose: bool = True,
+             overrides: Optional[dict] = None,
+             skip_full: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, reason = cell_is_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "chips": chips,
+        "status": "skipped" if not ok else "pending", "reason": reason,
+    }
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_kind}: SKIP ({reason})")
+        if save:
+            _save(result)
+        return result
+
+    info = SHAPES[shape]
+    seq_shard = (info["kind"] == "decode" and info["global_batch"] == 1)
+    t0 = time.time()
+    try:
+        if mesh_kind == "pod":
+            # roofline terms via L-extrapolation (scan bodies count once):
+            # metric(L) = a + b.L fitted at L=2,4, evaluated at L_full.
+            m2 = _compile_cell(_with_layers(cfg, 2), shape, mesh, seq_shard)
+            m4 = _compile_cell(_with_layers(cfg, 4), shape, mesh, seq_shard)
+            lf = cfg.num_layers
+
+            def extrap(k2, k4):
+                body = (k4 - k2) / 2.0
+                return max(k2 + body * (lf - 2), 0.0)
+
+            flops = extrap(m2["flops"], m4["flops"])
+            bytes_acc = extrap(m2["bytes"], m4["bytes"])
+            coll_total = extrap(m2["coll"].get("total", 0.0),
+                                m4["coll"].get("total", 0.0))
+            coll_detail = {k: extrap(m2["coll"].get(k, 0.0),
+                                     m4["coll"].get(k, 0.0))
+                           for k in set(m2["coll"]) | set(m4["coll"])}
+            # full-config compile proves memory fit + sharding coherence
+            mfull = None
+            if not skip_full:
+                mfull = _compile_cell(cfg, shape, mesh, seq_shard)
+        else:
+            mfull = _compile_cell(cfg, shape, mesh, seq_shard)
+            flops = mfull["flops"]
+            bytes_acc = mfull["bytes"]
+            coll_total = mfull["coll"].get("total", 0.0)
+            coll_detail = mfull["coll"]
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        result["status"] = "FAILED"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_kind}: FAILED "
+                  f"{result['error'][:300]}")
+        if save:
+            _save(result)
+        return result
+
+    terms = roofline_terms(flops, bytes_acc, coll_total, chips)
+    dominant = max(terms, key=terms.get)
+    mflops = model_flops(cfg, shape)
+    result.update({
+        "status": "ok",
+        "compile_s": time.time() - t0,
+        "hlo_flops": flops,               # per-chip (post-SPMD module)
+        "hlo_bytes": bytes_acc,
+        "collective_bytes": coll_detail,
+        "collective_total": coll_total,
+        "memory_analysis": (mfull or {}).get("mem", {}),
+        "roofline": {
+            # cost_analysis reports the per-chip partitioned module, so
+            # chips=1 in the denominators here
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / ICI_BW,
+        },
+        "model_flops": mflops,
+        "model_flops_per_chip": mflops / chips,
+        "useful_flops_frac": (mflops / chips) / flops if flops else 0.0,
+        "bytes_per_chip": ((mfull or {}).get("mem", {}).get(
+            "argument_size_bytes", 0) +
+            (mfull or {}).get("mem", {}).get("temp_size_bytes", 0)),
+    })
+    result["dominant_term"] = max(result["roofline"],
+                                  key=result["roofline"].get)
+    if verbose:
+        r = result["roofline"]
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind}: OK "
+              f"compile={result['compile_s']:.0f}s "
+              f"compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms "
+              f"dom={result['dominant_term']} "
+              f"useful={result['useful_flops_frac']:.2f}")
+    if save:
+        _save(result)
+    return result
+
+
+def _save(result: Dict[str, Any]) -> None:
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    with open(os.path.join(RESULT_DIR, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.archs import ARCH_IDS
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                r = run_cell(arch, shape, mesh_kind)
+                failures += r["status"] == "FAILED"
+    print(f"[dryrun] done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1) -> Mesh:
+    """Smoke-test mesh over whatever devices exist (usually 1 CPU)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

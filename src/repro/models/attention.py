@@ -1,0 +1,262 @@
+"""Attention: GQA/MQA, qk-norm, QKV bias, sliding windows, RoPE;
+full / blockwise(flash-style) prefill and KV-cache decode paths.
+
+Blockwise attention (online softmax over KV chunks via lax.scan) bounds
+activation memory at O(S · block) instead of O(S²) — required for the 32k
+prefill shapes; it is numerically the same computation (tested vs. full).
+
+Sliding windows: ``window = 0`` means global attention. A per-layer window
+array threads through scan-over-layers, enabling gemma3's 5:1 local:global
+pattern with homogeneous stacked params.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import Params, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qk_norm: bool = False,
+                   qkv_bias: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq_dh": dense_init(ks[0], d_model, num_heads * head_dim, dtype=dtype),
+        "wk_dh": dense_init(ks[1], d_model, num_kv_heads * head_dim,
+                            dtype=dtype),
+        "wv_dh": dense_init(ks[2], d_model, num_kv_heads * head_dim,
+                            dtype=dtype),
+        "wo_hd": dense_init(ks[3], num_heads * head_dim, d_model,
+                            dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq_bh"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk_bh"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv_bh"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["qnorm_d"] = jnp.zeros((head_dim,), dtype)
+        p["knorm_d"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, num_heads: int, num_kv_heads: int,
+                 head_dim: int, positions: jax.Array, rope_theta: float,
+                 norm_eps: float = 1e-6, use_rope: bool = True):
+    b, s, _ = x.shape
+    q = x @ p["wq_dh"]
+    k = x @ p["wk_dh"]
+    v = x @ p["wv_dh"]
+    if "bq_bh" in p:
+        q, k, v = q + p["bq_bh"], k + p["bk_bh"], v + p["bv_bh"]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if "qnorm_d" in p:
+        q = rms_norm(q, p["qnorm_d"], norm_eps)
+        k = rms_norm(k, p["knorm_d"], norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    # divisibility-aware TP: shard the heads axis when it divides the model
+    # axis, otherwise shard head_dim (MQA / few-KV-head configs)
+    from repro.distributed.sharding import mesh_axis_size
+    msz = mesh_axis_size("model")
+    if num_heads % msz == 0:
+        q = constrain(q, "act_bthd")
+    if num_kv_heads % msz == 0:
+        k = constrain(k, "kv_cache")
+        v = constrain(v, "kv_cache")
+    # else: leave KV unconstrained — replicating a 1-2-head KV once is far
+    # cheaper than per-block regathers of head_dim-sharded tensors
+    return q, k, v
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window, causal: bool,
+          prefix_len=0) -> jax.Array:
+    """(..., q, k) boolean validity mask. window: scalar or traced int32;
+    0 = unbounded. prefix_len > 0 gives a prefix-LM mask (full attention
+    within the first ``prefix_len`` positions — paligemma)."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = (diff >= 0) if causal else jnp.ones(diff.shape, bool)
+    pl_ = jnp.asarray(prefix_len)
+    ok |= jnp.broadcast_to(k_pos[..., None, :] < pl_, ok.shape)
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, (diff < w) | (k_pos[..., None, :] < pl_), True)
+    return ok
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (b,s,h,d), k/v: (b,t,kv,d), mask: (b,s,t) or (s,t)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32)
+    logits = logits / math.sqrt(d)
+    m = mask if mask.ndim == 3 else mask[None]
+    logits = jnp.where(m[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def full_attention(q, k, v, positions, window=0, causal=True,
+                   prefix_len=0) -> jax.Array:
+    mask = _mask(positions, positions, window, causal, prefix_len)
+    return _sdpa(q, k, v, mask)
+
+
+def blockwise_attention(q, k, v, positions, window=0, causal=True,
+                        block: int = 512, prefix_len=0) -> jax.Array:
+    """Flash-style online-softmax over KV blocks; O(S·block) memory."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    if s % block != 0:
+        return full_attention(q, k, v, positions, window, causal, prefix_len)
+    nblk = s // block
+    # keep operands in the model dtype (bf16): MXU-native inputs, f32
+    # accumulation via preferred_element_type — halves the einsum operand
+    # traffic vs upcasting q/k/v (EXPERIMENTS.md §Perf iter 3)
+    qg = (q.reshape(b, s, kvh, rep, d) / math.sqrt(d)).astype(q.dtype)
+    kb = jnp.moveaxis(k.reshape(b, nblk, block, kvh, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, block, kvh, d), 1, 0)
+    pb = jnp.moveaxis(positions.reshape(b, nblk, block), 1, 0)
+
+    def step(carry, inp):
+        acc, m_run, l_run = carry
+        kc, vc, pc = inp
+        logits = jnp.einsum("bskrd,btkd->bkrst", qg, kc,
+                            preferred_element_type=jnp.float32)
+        mask = _mask(positions, pc, window, causal, prefix_len)  # (b, s, blk)
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        scale = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bkrst,btkd->bkrsd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        l_run = l_run * scale + p.sum(axis=-1)
+        return (acc, m_new, l_run), None
+
+    acc0 = jnp.zeros((b, kvh, rep, s, d), jnp.float32)
+    m0 = jnp.full((b, kvh, rep, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, s), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    out = jnp.moveaxis(out.reshape(b, kvh * rep, s, d), 1, 2)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                     index: jax.Array, num_heads: int, num_kv_heads: int,
+                     head_dim: int, rope_theta: float, window=0,
+                     norm_eps: float = 1e-6,
+                     seq_shard: bool = False
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (b, 1, d); cache k/v: (b, S, kv, hd);
+    index: scalar current position. Returns (out (b,1,d'), new cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                                   positions, rope_theta, norm_eps)
+    # layout choice (EXPERIMENTS.md §Perf iter 1 + follow-up): when the kv
+    # heads divide the model axis, plain head-sharding is already
+    # collective-clean; otherwise shard the sequence dim (flash-decode).
+    from repro.distributed.sharding import mesh_axis_size
+    if seq_shard:
+        spec = "kv_cache_decode_b1"
+    elif num_kv_heads % mesh_axis_size("model") == 0:
+        spec = "kv_cache"
+    else:
+        spec = "kv_cache_decode"
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, index, 0, 0))
+    k = constrain(k, spec)
+    v = constrain(v, spec)
+    s_max = k.shape[1]
+    k_pos = jnp.arange(s_max, dtype=jnp.int32)[None].repeat(b, 0)
+    valid = k_pos <= index
+    w = jnp.asarray(window)
+    valid &= jnp.where(w > 0, index - k_pos < w, True)
+    out = _sdpa(q, k, v, jnp.broadcast_to(valid[:, None, :], (b, 1, s_max)))
+    out = out.reshape(b, 1, num_heads * head_dim)
+    return out @ p["wo_hd"], {"k": k, "v": v}
+
+
+def attention_block(p: Params, x: jax.Array, positions: jax.Array,
+                    num_heads: int, num_kv_heads: int, head_dim: int,
+                    rope_theta: float, window=0, causal: bool = True,
+                    norm_eps: float = 1e-6, block: int = 512,
+                    blockwise_threshold: int = 2048, prefix_len=0,
+                    return_kv: bool = False, backend: str = "jnp"):
+    """Training/prefill attention; picks blockwise for long sequences."""
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_theta, norm_eps)
+    s = x.shape[1]
+    if backend in ("pallas", "pallas_interp") and s % block == 0 and \
+            isinstance(window, int) and isinstance(prefix_len, int):
+        # VMEM-resident flash kernel (real-TPU path; see kernels/flash_attention)
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal, window, prefix_len,
+                              backend=backend, bq=block, bk=block)
+    elif s > blockwise_threshold:
+        out = blockwise_attention(q, k, v, positions, window, causal, block,
+                                  prefix_len)
+    else:
+        out = full_attention(q, k, v, positions, window, causal, prefix_len)
+    b = x.shape[0]
+    out = out.reshape(b, s, num_heads * head_dim)
+    out = out @ p["wo_hd"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention_block(p: Params, x: jax.Array, enc_out: jax.Array,
+                          num_heads: int, num_kv_heads: int, head_dim: int,
+                          return_kv: bool = False):
+    """Encoder-decoder cross attention (whisper). No RoPE, no mask."""
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    q = (x @ p["wq_dh"]).reshape(b, s, num_heads, head_dim)
+    k = (enc_out @ p["wk_dh"]).reshape(b, t, num_kv_heads, head_dim)
+    v = (enc_out @ p["wv_dh"]).reshape(b, t, num_kv_heads, head_dim)
+    mask = jnp.ones((b, s, t), bool)
+    out = _sdpa(q, k, v, mask).reshape(b, s, num_heads * head_dim)
+    out = out @ p["wo_hd"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention_decode(p: Params, x: jax.Array, xk: jax.Array,
+                           xv: jax.Array, num_heads: int, num_kv_heads: int,
+                           head_dim: int) -> jax.Array:
+    """Decode-time cross attention against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    t = xk.shape[1]
+    q = (x @ p["wq_dh"]).reshape(b, s, num_heads, head_dim)
+    mask = jnp.ones((b, s, t), bool)
+    out = _sdpa(q, xk, xv, mask).reshape(b, s, num_heads * head_dim)
+    return out @ p["wo_hd"]

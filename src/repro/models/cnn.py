@@ -1,0 +1,170 @@
+"""JAX CNN models built from the Table-II layer specs (one source of truth
+with core/workloads.py). Supports:
+
+  * float forward (training, Table-II accuracy experiments),
+  * fake-quantized forward (PTQ accuracy at int8/int4),
+  * PIM-executed forward — convs (im2col GEMM) and dense layers run through
+    the OPIMA PIM engine (exact bit-sliced or analog mode): the paper's
+    deployment path.
+
+The executor is structure-aware, keyed on the builders' deterministic layer
+names: ResNet basic blocks (c1/c2/ds + residual), Inception branches
+(b1 | b3r→b3 | b5r→b5a→b5b | pool→bp, concatenated), SqueezeNet fire
+modules (sq → e1‖e3 concat), MobileNet/VGG sequential. Pooling between
+stages is inferred from the specs' spatial bookkeeping (when a layer
+expects a smaller input than the current map, a max-pool bridges the gap).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim import PimConfig, pim_matmul, prepare_weights
+from repro.core.workloads import ConvSpec, DenseSpec, LayerSpec
+from repro.quant.quantize import fake_quantize
+
+Params = Dict[str, Any]
+
+
+def init_cnn(layers: Sequence[LayerSpec], key) -> Params:
+    params: Params = {}
+    ks = jax.random.split(key, len(layers))
+    for k, spec in zip(ks, layers):
+        if isinstance(spec, ConvSpec):
+            fan_in = spec.kh * spec.kw * spec.in_c_per_group
+            w = jax.random.normal(
+                k, (spec.kh, spec.kw, spec.in_c_per_group, spec.out_c))
+            params[spec.name] = {"w": w * jnp.sqrt(2.0 / fan_in),
+                                 "b": jnp.zeros((spec.out_c,))}
+        else:
+            w = jax.random.normal(k, (spec.in_features, spec.out_features))
+            params[spec.name] = {"w": w / jnp.sqrt(spec.in_features),
+                                 "b": jnp.zeros((spec.out_features,))}
+    return params
+
+
+def _im2col(x: jax.Array, spec: ConvSpec) -> jax.Array:
+    """x: (B, H, W, C) -> patches (B, oh, ow, kh*kw*C), SAME padding."""
+    kh, kw, s = spec.kh, spec.kw, spec.stride
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    cols = []
+    oh, ow = spec.out_h, spec.out_w
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i:i + oh * s:s, j:j + ow * s:s, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _maxpool(x: jax.Array, factor: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, factor, factor, 1),
+        (1, factor, factor, 1), "VALID")
+
+
+class _Executor:
+    def __init__(self, params: Params, quant_bits: int = 0,
+                 pim: Optional[PimConfig] = None, rng=None):
+        self.params = params
+        self.quant_bits = quant_bits
+        self.pim = pim
+        self.rng = rng
+
+    def matmul(self, x: jax.Array, w: jax.Array, per_col_axis) -> jax.Array:
+        if self.quant_bits:
+            w = fake_quantize(w, self.quant_bits, axis=per_col_axis)
+        if self.pim is not None:
+            return pim_matmul(x, prepare_weights(w, self.pim), self.pim,
+                              self.rng)
+        return x @ w
+
+    def conv(self, spec: ConvSpec, x: jax.Array, relu: bool = True
+             ) -> jax.Array:
+        if x.shape[1] > spec.in_h:                 # stage pooling bridge
+            x = _maxpool(x, x.shape[1] // spec.in_h)
+        p = self.params[spec.name]
+        if spec.groups == 1:
+            cols = _im2col(x, spec)
+            y = self.matmul(cols, p["w"].reshape(-1, spec.out_c), (0,))
+        else:                                      # depthwise
+            cols = _im2col(x, spec)
+            b, oh, ow, _ = cols.shape
+            cols = cols.reshape(b, oh, ow, spec.kh * spec.kw, spec.in_c)
+            w = p["w"]
+            if self.quant_bits:
+                w = fake_quantize(w, self.quant_bits, axis=(0, 1, 2))
+            y = jnp.einsum("bhwkc,kzc->bhwc",
+                           cols, w.reshape(spec.kh * spec.kw, 1, spec.in_c))
+            if self.pim is not None:
+                y = fake_quantize(y, self.pim.act_bits)
+        y = y + p["b"]
+        return jax.nn.relu(y) if relu else y
+
+    def dense(self, spec: DenseSpec, x: jax.Array, relu: bool) -> jax.Array:
+        if x.ndim == 4:
+            if spec.in_features == x.shape[1] * x.shape[2] * x.shape[3]:
+                x = x.reshape(x.shape[0], -1)
+            else:
+                x = jnp.mean(x, axis=(1, 2))
+        y = self.matmul(x, self.params[spec.name]["w"], (0,))
+        y = y + self.params[spec.name]["b"]
+        return jax.nn.relu(y) if relu else y
+
+
+def cnn_forward(params: Params, layers: Sequence[LayerSpec], x: jax.Array,
+                quant_bits: int = 0, pim: Optional[PimConfig] = None,
+                rng=None) -> jax.Array:
+    """x: (B, H, W, 3) -> logits (B, classes)."""
+    ex = _Executor(params, quant_bits, pim, rng)
+    specs = list(layers)
+    i = 0
+    while i < len(specs):
+        spec = specs[i]
+        name = spec.name
+        if isinstance(spec, ConvSpec) and name.endswith(".b1"):
+            # Inception block: 7 consecutive specs
+            b1s, b3rs, b3s, b5rs, b5as, b5bs, bps = specs[i:i + 7]
+            if x.shape[1] > b1s.in_h:
+                x = _maxpool(x, x.shape[1] // b1s.in_h)
+            b1 = ex.conv(b1s, x)
+            b3 = ex.conv(b3s, ex.conv(b3rs, x))
+            b5 = ex.conv(b5bs, ex.conv(b5as, ex.conv(b5rs, x)))
+            xp = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1),
+                "SAME") / 9.0
+            bp = ex.conv(bps, xp)
+            x = jnp.concatenate([b1, b3, b5, bp], axis=-1)
+            i += 7
+        elif isinstance(spec, ConvSpec) and name.endswith(".sq"):
+            # SqueezeNet fire module: sq -> (e1 || e3) concat
+            sqs, e1s, e3s = specs[i:i + 3]
+            if x.shape[1] > sqs.in_h:
+                x = _maxpool(x, x.shape[1] // sqs.in_h)
+            sq = ex.conv(sqs, x)
+            x = jnp.concatenate([ex.conv(e1s, sq), ex.conv(e3s, sq)],
+                                axis=-1)
+            i += 3
+        elif isinstance(spec, ConvSpec) and name.endswith("c1") and \
+                "b" in name:
+            # ResNet basic block: c1 -> c2 (+ds shortcut), residual add
+            c1s, c2s = specs[i], specs[i + 1]
+            has_ds = i + 2 < len(specs) and specs[i + 2].name.endswith("ds")
+            saved = x
+            h = ex.conv(c2s, ex.conv(c1s, x), relu=False)
+            shortcut = ex.conv(specs[i + 2], saved, relu=False) if has_ds \
+                else saved
+            x = jax.nn.relu(h + shortcut)
+            i += 3 if has_ds else 2
+        elif isinstance(spec, ConvSpec):
+            last = (i == len(specs) - 1)           # SqueezeNet conv10 head
+            x = ex.conv(spec, x, relu=not last)
+            i += 1
+        else:
+            last = (i == len(specs) - 1)
+            x = ex.dense(spec, x, relu=not last)
+            i += 1
+    if x.ndim == 4:
+        x = jnp.mean(x, axis=(1, 2))
+    return x

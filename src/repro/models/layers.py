@@ -1,0 +1,90 @@
+"""Core layers: norms, embeddings, RoPE, MLPs. Pure-functional, dict params.
+
+Parameter naming drives sharding (distributed/sharding.py):
+  *_vd   vocab/embedding tables      -> sharded (model, None)
+  *_dh   column-parallel projections -> sharded (None, model)
+  *_hd   row-parallel projections    -> sharded (model, None)
+  *_bh   column-parallel biases      -> sharded (model,)
+  s_*    stacked across layers (scan-over-layers) -> spec shifted right
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama/qwen/gemma-style); plain MLP for enc-dec
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi_dh": dense_init(k1, d_model, d_ff, dtype=dtype),
+         "wo_hd": dense_init(k3, d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["wg_dh"] = dense_init(k2, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, activation: str = "silu"
+              ) -> jax.Array:
+    from repro.distributed.sharding import constrain
+    h = x @ p["wi_dh"]
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    if "wg_dh" in p:
+        h = act(x @ p["wg_dh"]) * h
+    else:
+        h = act(h)
+    h = constrain(h, "act_btf")
+    return h @ p["wo_hd"]
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32
+                   ) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table_vd: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table_vd, tokens, axis=0)
+
+
+def unembed(table_vd: jax.Array, x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import constrain
+    logits = x @ table_vd.T
+    return constrain(logits, "act_btv")

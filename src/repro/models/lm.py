@@ -1,0 +1,365 @@
+"""Unified LM stack for all assigned architectures.
+
+One parameterized decoder (+ optional encoder) covering:
+  dense GQA/MQA attention (qk-norm, QKV bias, sliding windows 5:1, RoPE),
+  Mamba2 SSD layers, hymba-style parallel attn+SSM blocks, MoE FFNs
+  (ragged/EP), whisper-style encoder-decoder with cross-attention, and
+  paligemma-style VLM prefix (stub patch embeddings -> projector).
+
+Layers are homogeneous per config and stacked for jax.lax.scan (compile
+time stays flat in depth — essential for the 512-device dry-runs).
+Heterogeneity (gemma3 local:global) threads through scan as a per-layer
+window array.
+
+API:
+  init_lm(cfg, key)                           -> params
+  forward(params, cfg, batch)                 -> logits, aux
+  prefill(params, cfg, batch, max_len)        -> logits, cache
+  decode_step(params, cfg, cache, token, idx) -> logits, cache
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (Params, dense_init, embed, embedding_init,
+                                 mlp_apply, mlp_init, rms_norm, unembed)
+from repro.models.moe import moe_apply, moe_init
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, key, cross_attention: bool = False
+                ) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1_d": jnp.zeros((cfg.d_model,))}
+    if cfg.block_type in ("attn", "hybrid") or cross_attention:
+        p["attn"] = attn.attention_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim, qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias)
+    if cfg.block_type in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.ssm_init(
+            ks[1], cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+            cfg.ssm_head_dim, cfg.ssm_groups)
+    if cross_attention:
+        p["lnx_d"] = jnp.zeros((cfg.d_model,))
+        p["xattn"] = attn.attention_init(
+            ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim)
+    if cfg.d_ff > 0 or cfg.is_moe:
+        p["ln2_d"] = jnp.zeros((cfg.d_model,))
+        if cfg.is_moe:
+            p["moe"] = moe_init(ks[3], cfg.d_model, cfg.num_experts,
+                                cfg.moe_d_ff,
+                                shared_experts=cfg.shared_experts,
+                                shared_d_ff=cfg.moe_d_ff)
+        else:
+            p["mlp"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff,
+                                gated=cfg.gated_mlp)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed_vd": embedding_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm_d": jnp.zeros((cfg.d_model,)),
+    }
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(cfg, k, cross_attention=cfg.encoder_layers > 0)
+    )(layer_keys)
+    if not cfg.tie_embeddings:
+        params["unembed_vd"] = embedding_init(ks[2], cfg.padded_vocab,
+                                              cfg.d_model)
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(ks[3], cfg.encoder_layers)
+        enc_cfg = cfg  # same dims; bidirectional handled at apply time
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(enc_cfg, k))(enc_keys)
+        params["enc_norm_d"] = jnp.zeros((cfg.d_model,))
+    if cfg.vision_tokens:
+        params["vproj_dh"] = dense_init(ks[4], cfg.vision_dim, cfg.d_model)
+    return params
+
+
+def _vocab_mask(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """Mask padded-vocab logits to -inf (shard-friendly elementwise add)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad = jnp.arange(cfg.padded_vocab, dtype=jnp.int32) >= cfg.vocab_size
+    return logits + jnp.where(pad, -1e30, 0.0).astype(logits.dtype)
+
+
+def _windows(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.array([cfg.layer_window(i) for i in range(cfg.num_layers)],
+                     jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+def _mixer(cfg: ModelConfig, p: Params, h: jax.Array, positions, window,
+           prefix_len, causal: bool) -> jax.Array:
+    outs = []
+    if cfg.block_type in ("attn", "hybrid"):
+        outs.append(attn.attention_block(
+            p["attn"], h, positions, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim, cfg.rope_theta, window=window, causal=causal,
+            norm_eps=cfg.norm_eps, block=cfg.attn_block,
+            blockwise_threshold=cfg.blockwise_threshold,
+            prefix_len=prefix_len, backend=cfg.attn_backend))
+    if cfg.block_type in ("ssm", "hybrid"):
+        outs.append(ssm_mod.ssm_apply(
+            p["ssm"], h, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
+            cfg.ssm_groups, backend=cfg.ssd_backend, chunk=cfg.ssd_chunk))
+    return outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1])
+
+
+def _ffn(cfg: ModelConfig, p: Params, x: jax.Array, aux: dict) -> jax.Array:
+    if cfg.is_moe:
+        return moe_apply(p["moe"], x, cfg.experts_per_token, aux)
+    return mlp_apply(p["mlp"], x, cfg.activation)
+
+
+def _decoder_layer(cfg: ModelConfig, p: Params, x: jax.Array, positions,
+                   window, prefix_len, enc_out: Optional[jax.Array],
+                   causal: bool = True) -> Tuple[jax.Array, dict]:
+    aux: dict = {}
+    h = rms_norm(x, p["ln1_d"], cfg.norm_eps)
+    x = x + _mixer(cfg, p, h, positions, window, prefix_len, causal)
+    if enc_out is not None:
+        h = rms_norm(x, p["lnx_d"], cfg.norm_eps)
+        x = x + attn.cross_attention_block(
+            p["xattn"], h, enc_out, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim)
+    if "ln2_d" in p:
+        h = rms_norm(x, p["ln2_d"], cfg.norm_eps)
+        x = x + _ffn(cfg, p, h, aux)
+    x = constrain(x, "act_btd")
+    return x, aux
+
+
+def _stack(cfg: ModelConfig, layers: Params, x: jax.Array, positions,
+           prefix_len, enc_out: Optional[jax.Array], causal: bool = True,
+           num_layers: Optional[int] = None) -> Tuple[jax.Array, dict]:
+    windows = _windows(cfg) if num_layers is None else jnp.zeros(
+        (num_layers,), jnp.int32)
+
+    def body(carry, inp):
+        x, lb, z = carry
+        lp, w = inp
+        x, aux = _decoder_layer(cfg, lp, x, positions, w, prefix_len,
+                                enc_out, causal)
+        return (x, lb + aux.get("moe_lb_loss", 0.0),
+                z + aux.get("moe_z_loss", 0.0)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    n = windows.shape[0]
+    (x, lb, z), _ = jax.lax.scan(body, (x, 0.0, 0.0), (layers, windows),
+                                 unroll=n if cfg.unroll_layers else 1)
+    return x, {"moe_lb_loss": lb, "moe_z_loss": z}
+
+
+# ---------------------------------------------------------------------------
+# forward (training) / encoder
+# ---------------------------------------------------------------------------
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder: frames are stub embeddings (B, S_enc, d_model)."""
+    frames = frames.astype(params["enc_norm_d"].dtype)  # match param dtype
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _stack(cfg, params["enc_layers"], frames, positions,
+                  prefix_len=0, enc_out=None, causal=False,
+                  num_layers=cfg.encoder_layers)
+    return rms_norm(x, params["enc_norm_d"], cfg.norm_eps)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+                  ) -> Tuple[jax.Array, jax.Array, int]:
+    tokens = batch["tokens"]
+    x = embed(params["embed_vd"], tokens)
+    prefix_len = 0
+    if cfg.vision_tokens and "patches" in batch:
+        xv = batch["patches"] @ params["vproj_dh"]
+        x = jnp.concatenate([xv.astype(x.dtype), x], axis=1)
+        prefix_len = batch["patches"].shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, "act_btd")
+    return x, positions, prefix_len
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+            ) -> Tuple[jax.Array, dict]:
+    """Training forward. batch: tokens (B,S) [+ patches | frames].
+    Returns (logits (B, S(+prefix), V), aux)."""
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, batch["frames"])
+    x, aux = _stack(cfg, params["layers"], x, positions, prefix_len, enc_out)
+    x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
+    table = params["embed_vd"] if cfg.tie_embeddings else params["unembed_vd"]
+    return _vocab_mask(cfg, unembed(table, x)), aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    cache: Dict[str, jax.Array] = {}
+    l = cfg.num_layers
+    if cfg.block_type in ("attn", "hybrid"):
+        cache["k"] = jnp.zeros((l, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.block_type in ("ssm", "hybrid"):
+        d_inner, nheads, conv_dim = ssm_mod.ssm_dims(
+            cfg.d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
+            cfg.ssm_groups)
+        cache["state"] = jnp.zeros((l, batch, nheads, cfg.ssm_state,
+                                    cfg.ssm_head_dim), jnp.float32)
+        cache["conv_tail"] = jnp.zeros((l, batch, ssm_mod.CONV_K - 1,
+                                        conv_dim), jnp.float32)
+    if cfg.encoder_layers:
+        cache["xk"] = jnp.zeros((l, batch, enc_len, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            max_len: int, cache_dtype=jnp.bfloat16
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Process the prompt, build the KV/SSM cache sized to ``max_len``.
+    Returns (last-position logits (B, V), cache)."""
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    assert max_len >= s, (f"cache max_len={max_len} < prompt length {s} "
+                          f"(includes {prefix_len} prefix tokens)")
+    enc_out = encode(params, cfg, batch["frames"]) if cfg.encoder_layers \
+        else None
+    windows = _windows(cfg)
+    cache = init_cache(cfg, b, max_len,
+                       enc_len=enc_out.shape[1] if enc_out is not None else 0,
+                       dtype=cache_dtype)
+
+    def body(carry, inp):
+        x, = carry
+        lp, w = inp
+        ys = {}
+        h = rms_norm(x, lp["ln1_d"], cfg.norm_eps)
+        outs = []
+        if cfg.block_type in ("attn", "hybrid"):
+            out, (k, v) = attn.attention_block(
+                lp["attn"], h, positions, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, cfg.rope_theta, window=w, causal=True,
+                norm_eps=cfg.norm_eps, block=cfg.attn_block,
+                blockwise_threshold=cfg.blockwise_threshold,
+                prefix_len=prefix_len, return_kv=True)
+            outs.append(out)
+            pad = max_len - s
+            ys["k"] = jnp.pad(k.astype(cache_dtype),
+                              ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ys["v"] = jnp.pad(v.astype(cache_dtype),
+                              ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.block_type in ("ssm", "hybrid"):
+            out, st = ssm_mod.ssm_apply(
+                lp["ssm"], h, cfg.ssm_state, cfg.ssm_expand,
+                cfg.ssm_head_dim, cfg.ssm_groups, backend=cfg.ssd_backend,
+                chunk=cfg.ssd_chunk, return_state=True)
+            outs.append(out)
+            ys["state"], ys["conv_tail"] = st
+        x = x + (outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1]))
+        if enc_out is not None:
+            h = rms_norm(x, lp["lnx_d"], cfg.norm_eps)
+            out, (xk, xv) = attn.cross_attention_block(
+                lp["xattn"], h, enc_out, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, return_kv=True)
+            x = x + out
+            ys["xk"] = xk.astype(cache_dtype)
+            ys["xv"] = xv.astype(cache_dtype)
+        if "ln2_d" in lp:
+            h = rms_norm(x, lp["ln2_d"], cfg.norm_eps)
+            x = x + _ffn(cfg, lp, h, {})
+        x = constrain(x, "act_btd")
+        return (x,), ys
+
+    (x,), caches = jax.lax.scan(
+        body, (x,), (params["layers"], windows),
+        unroll=cfg.num_layers if cfg.unroll_layers else 1)
+    for key in cache:
+        if key in caches:
+            cache[key] = caches[key].astype(cache[key].dtype)
+    x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
+    table = params["embed_vd"] if cfg.tie_embeddings else params["unembed_vd"]
+    logits = _vocab_mask(cfg, unembed(table, x[:, -1:, :]))[:, 0]
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig,
+                cache: Dict[str, jax.Array], token: jax.Array,
+                index: jax.Array, seq_shard: bool = False
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. token: (B, 1) int32; index: scalar int32 position.
+    Returns (logits (B, V), updated cache)."""
+    x = embed(params["embed_vd"], token)
+    windows = _windows(cfg)
+
+    def body(carry, inp):
+        x, = carry
+        lp, w, lc = inp
+        ys = {}
+        h = rms_norm(x, lp["ln1_d"], cfg.norm_eps)
+        outs = []
+        if cfg.block_type in ("attn", "hybrid"):
+            out, kv = attn.decode_attention(
+                lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, index,
+                cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                cfg.rope_theta, window=w, norm_eps=cfg.norm_eps,
+                seq_shard=seq_shard)
+            outs.append(out)
+            ys["k"], ys["v"] = kv["k"], kv["v"]
+        if cfg.block_type in ("ssm", "hybrid"):
+            out, st = ssm_mod.ssm_step(
+                lp["ssm"], h, {"state": lc["state"],
+                               "conv_tail": lc["conv_tail"]},
+                cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
+                cfg.ssm_groups)
+            outs.append(out)
+            ys["state"], ys["conv_tail"] = st["state"], st["conv_tail"]
+        x = x + (outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1]))
+        if cfg.encoder_layers:
+            h = rms_norm(x, lp["lnx_d"], cfg.norm_eps)
+            out = attn.cross_attention_decode(
+                lp["xattn"], h, lc["xk"], lc["xv"], cfg.num_heads,
+                cfg.num_kv_heads, cfg.head_dim)
+            x = x + out
+            ys["xk"], ys["xv"] = lc["xk"], lc["xv"]
+        if "ln2_d" in lp:
+            h = rms_norm(x, lp["ln2_d"], cfg.norm_eps)
+            x = x + _ffn(cfg, lp, h, {})
+        return (x,), ys
+
+    (x,), new_cache = jax.lax.scan(
+        body, (x,), (params["layers"], windows, cache),
+        unroll=cfg.num_layers if cfg.unroll_layers else 1)
+    x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
+    table = params["embed_vd"] if cfg.tie_embeddings else params["unembed_vd"]
+    logits = _vocab_mask(cfg, unembed(table, x))[:, 0]
+    return logits, new_cache

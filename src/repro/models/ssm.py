@@ -1,0 +1,187 @@
+"""Mamba2 (SSD) block — faithful to arXiv:2405.21060.
+
+Per-component projections -> short causal conv on (x, B, C) -> SSD scan
+(chunk-parallel via the ssd_scan kernel family) -> gated output via z ->
+out_proj. Decode keeps an (heads, N, P) state + conv tail per layer —
+O(1) per token, which is why mamba2/hymba run the long_500k shape.
+
+TP note: projections are split per component (wz/wx/wdt column-parallel on
+'model' so the d_inner/head dims shard cleanly; B/C projections replicated
+— every head shard needs the full B,C vectors when ngroups < shards).
+A fused in_proj would slice a sharded dimension at shard-misaligned
+offsets and force regathers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.models.layers import Params, dense_init, rms_norm
+
+CONV_K = 4
+
+
+def ssm_dims(d_model: int, ssm_state: int, expand: int = 2,
+             head_dim: int = 64, ngroups: int = 1):
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ngroups * ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def ssm_init(key, d_model: int, ssm_state: int, expand: int = 2,
+             head_dim: int = 64, ngroups: int = 1, dtype=jnp.float32
+             ) -> Params:
+    d_inner, nheads, _ = ssm_dims(d_model, ssm_state, expand, head_dim,
+                                  ngroups)
+    gn = ngroups * ssm_state
+    ks = jax.random.split(key, 8)
+    p = {
+        "wz_dh": dense_init(ks[0], d_model, d_inner, dtype=dtype),
+        "wx_dh": dense_init(ks[1], d_model, d_inner, dtype=dtype),
+        "wb_dn": dense_init(ks[2], d_model, gn, dtype=dtype),
+        "wc_dn": dense_init(ks[3], d_model, gn, dtype=dtype),
+        "wdt_dh": dense_init(ks[4], d_model, nheads, dtype=dtype),
+        "wout_hd": dense_init(ks[5], d_inner, d_model, dtype=dtype),
+        # depthwise causal convs per component
+        "convx_w": (jax.random.normal(ks[6], (CONV_K, d_inner)) /
+                    math.sqrt(CONV_K)).astype(dtype),
+        "convx_b": jnp.zeros((d_inner,), dtype),
+        "convbc_w": (jax.random.normal(ks[7], (CONV_K, 2 * gn)) /
+                     math.sqrt(CONV_K)).astype(dtype),
+        "convbc_b": jnp.zeros((2 * gn,), dtype),
+        # per-head A (log), dt bias, D skip
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[0], (nheads,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(dtype),
+        "d_skip": jnp.ones((nheads,), dtype),
+        "norm_d": jnp.zeros((d_inner,), dtype),
+    }
+    return p
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, kernel CONV_K. xc: (B, L, C).
+    tail: (B, CONV_K-1, C) history for decode. Returns (out, new tail)."""
+    bsz, l, c = xc.shape
+    if tail is None:
+        tail = jnp.zeros((bsz, CONV_K - 1, c), xc.dtype)
+    full = jnp.concatenate([tail, xc], axis=1)
+    out = jnp.zeros_like(xc)
+    for i in range(CONV_K):
+        out = out + full[:, i:i + l, :] * w[i]
+    new_tail = full[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(out + b), new_tail
+
+
+def _project(p: Params, x_in: jax.Array):
+    z = x_in @ p["wz_dh"]
+    x = x_in @ p["wx_dh"]
+    bc = jnp.concatenate([x_in @ p["wb_dn"], x_in @ p["wc_dn"]], axis=-1)
+    dt = x_in @ p["wdt_dh"]
+    return z, x, bc, dt
+
+
+def ssm_apply(p: Params, x_in: jax.Array, ssm_state: int, expand: int = 2,
+              head_dim: int = 64, ngroups: int = 1,
+              backend: str = "chunked", chunk: int = 128,
+              return_state: bool = False):
+    """Training/prefill forward. x_in: (B, L, D) -> (B, L, D)
+    [, (final ssm state, conv tails)]."""
+    bsz, l, d_model = x_in.shape
+    d_inner, nheads, _ = ssm_dims(d_model, ssm_state, expand, head_dim,
+                                  ngroups)
+    gn = ngroups * ssm_state
+    z, x, bc, dt = _project(p, x_in)
+    x, tail_x = _causal_conv(x, p["convx_w"], p["convx_b"])
+    bc, tail_bc = _causal_conv(bc, p["convbc_w"], p["convbc_b"])
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))   # decay
+    xh = x.reshape(bsz, l, nheads, head_dim).astype(jnp.float32)
+    xh_dt = xh * dt[..., None]
+    heads_per_group = nheads // ngroups
+    bg = bmat.reshape(bsz, l, ngroups, ssm_state).astype(jnp.float32)
+    cg = cmat.reshape(bsz, l, ngroups, ssm_state).astype(jnp.float32)
+    bh = jnp.repeat(bg, heads_per_group, axis=2)
+    ch = jnp.repeat(cg, heads_per_group, axis=2)
+
+    def fold(t):  # (B,L,H,...) -> (B*H, L, ...)
+        t = jnp.moveaxis(t, 2, 1)
+        return t.reshape((bsz * nheads, l) + t.shape[3:])
+
+    y, s_fin = ssd_scan(fold(xh_dt), fold(a[..., None])[..., 0],
+                        fold(bh), fold(ch), chunk=chunk, backend=backend)
+    y = y.reshape(bsz, nheads, l, head_dim)
+    y = jnp.moveaxis(y, 1, 2)                       # (B, L, H, P)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_d"])
+    y = y @ p["wout_hd"]
+    if return_state:
+        s_fin = s_fin.reshape(bsz, nheads, ssm_state, head_dim)
+        return y, (s_fin, jnp.concatenate([tail_x, tail_bc], axis=-1))
+    return y
+
+
+def ssm_init_cache(batch: int, d_model: int, ssm_state: int,
+                   expand: int = 2, head_dim: int = 64, ngroups: int = 1,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d_inner, nheads, conv_dim = ssm_dims(d_model, ssm_state, expand,
+                                         head_dim, ngroups)
+    return {
+        "state": jnp.zeros((batch, nheads, ssm_state, head_dim), dtype),
+        "conv_tail": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+    }
+
+
+def ssm_step(p: Params, x_in: jax.Array, cache: Dict[str, jax.Array],
+             ssm_state: int, expand: int = 2, head_dim: int = 64,
+             ngroups: int = 1) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode. x_in: (B, 1, D)."""
+    bsz, _, d_model = x_in.shape
+    d_inner, nheads, _ = ssm_dims(d_model, ssm_state, expand, head_dim,
+                                  ngroups)
+    gn = ngroups * ssm_state
+    z, x, bc, dt = _project(p, x_in)
+    tail = cache["conv_tail"]
+    tail_x, tail_bc = tail[..., :d_inner], tail[..., d_inner:]
+    x, new_tail_x = _causal_conv(x, p["convx_w"], p["convx_b"], tail=tail_x)
+    bc, new_tail_bc = _causal_conv(bc, p["convbc_w"], p["convbc_b"],
+                                   tail=tail_bc)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32)))
+    xh = x[:, 0].reshape(bsz, nheads, head_dim).astype(jnp.float32)
+    heads_per_group = nheads // ngroups
+    bh = jnp.repeat(bmat[:, 0].reshape(bsz, ngroups, ssm_state),
+                    heads_per_group, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cmat[:, 0].reshape(bsz, ngroups, ssm_state),
+                    heads_per_group, axis=1).astype(jnp.float32)
+
+    state = cache["state"].astype(jnp.float32)
+    state = (a[..., None, None] * state +
+             bh[..., :, None] * (xh * dt[..., None])[..., None, :])
+    from repro.distributed.sharding import mesh_axis_size
+    msz = mesh_axis_size("model")
+    state = constrain(state, "ssm_state" if nheads % msz == 0
+                      else "ssm_state_hd")
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_d"])
+    new_tail = jnp.concatenate([new_tail_x, new_tail_bc], axis=-1)
+    return y @ p["wout_hd"], {"state": state.astype(cache["state"].dtype),
+                              "conv_tail": new_tail.astype(
+                                  cache["conv_tail"].dtype)}

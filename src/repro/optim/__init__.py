@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, clip_by_global_norm,
+                               global_norm, schedule_lr)
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     init_error_state)

@@ -1,0 +1,61 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 quantizes gradients before the cross-pod all-reduce and keeps the
+quantization residual locally (error feedback, 1-bit-Adam-style), so the
+compression error is re-injected next step instead of being lost —
+convergence matches uncompressed SGD/Adam to first order while cross-pod
+traffic drops 4x (f32->int8).
+
+The compress/decompress pair is exercised numerically in tests; in the
+train step it wraps the gradient tree right before psum/pmean. The OPIMA
+connection is direct: this is the same nibble-quantization machinery the
+paper uses for its datapath, applied to collective traffic.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import qmax
+
+PyTree = Any
+
+
+def compress_leaf(g: jax.Array, err: Optional[jax.Array], bits: int = 8
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (codes int8, scale, new error residual)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / qmax(bits)
+    codes = jnp.clip(jnp.round(g32 / scale), -qmax(bits),
+                     qmax(bits)).astype(jnp.int8)
+    recon = codes.astype(jnp.float32) * scale
+    return codes, scale, g32 - recon
+
+
+def decompress_leaf(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: PyTree, err_state: Optional[PyTree], bits: int = 8
+                   ) -> Tuple[PyTree, PyTree, PyTree]:
+    """Tree-wise compression. Returns (codes, scales, new error state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = treedef.flatten_up_to(err_state) if err_state is not None \
+        else [None] * len(leaves)
+    out = [compress_leaf(g, e, bits) for g, e in zip(leaves, errs)]
+    codes = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_err = treedef.unflatten([o[2] for o in out])
+    return codes, scales, new_err
+
+
+def decompress_grads(codes: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree.map(decompress_leaf, codes, scales)
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

@@ -1,0 +1,73 @@
+"""Nibble (4-bit plane) decomposition — the heart of OPIMA's TDM scheme.
+
+OPIMA stores 4 bits per OPCM cell. A b-bit parameter therefore occupies
+ceil(b/4) cells, and a b_a-bit × b_w-bit multiply is executed as
+(b_a/4)×(b_w/4) one-shot 4b×4b analog multiplies whose partial products are
+recombined with shift-and-add in the aggregation unit.
+
+We use a *sign-magnitude* digit decomposition: the magnitude is split into
+unsigned base-16 digits (each in [0, 15]) and the sign is re-applied to every
+digit. This matches the optical encoding (laser amplitude carries magnitude,
+sign is tracked digitally) and keeps every nibble representable in an OPCM
+cell's 16 transmission levels. Signed digits in [-15, 15] still multiply
+exactly on the MXU in int arithmetic.
+
+value = sign * sum_d magnitude_digit_d * 16**d
+      =        sum_d (sign*magnitude_digit_d) * 16**d
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NIBBLE_BITS = 4
+NIBBLE_BASE = 1 << NIBBLE_BITS  # 16
+
+
+def num_nibbles(bits: int) -> int:
+    return max(1, (bits + NIBBLE_BITS - 1) // NIBBLE_BITS)
+
+
+def to_nibbles(codes: jax.Array, bits: int) -> jax.Array:
+    """Decompose signed integer codes into signed base-16 digit planes.
+
+    Args:
+      codes: integer array (any signed int dtype), values in [-2^(bits-1)+1,
+        2^(bits-1)-1].
+      bits: logical bit width of ``codes``.
+
+    Returns:
+      int8 array of shape ``(num_nibbles(bits),) + codes.shape``; plane ``d``
+      holds digit ``d`` (LSB first), each in [-15, 15], such that
+      ``sum_d planes[d] * 16**d == codes``.
+    """
+    n = num_nibbles(bits)
+    sign = jnp.sign(codes).astype(jnp.int32)
+    mag = jnp.abs(codes).astype(jnp.int32)
+    planes = []
+    for _ in range(n):
+        planes.append((mag % NIBBLE_BASE) * sign)
+        mag = mag // NIBBLE_BASE
+    return jnp.stack(planes, axis=0).astype(jnp.int8)
+
+
+def from_nibbles(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_nibbles` (shift-and-add recombination)."""
+    n = planes.shape[0]
+    weights = (NIBBLE_BASE ** jnp.arange(n, dtype=jnp.int32)).reshape(
+        (n,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def pack_nibble_pair(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Pack two unsigned 4-bit planes into one uint8 (storage density model:
+    two OPCM 'cells' per byte of host storage)."""
+    return ((hi.astype(jnp.uint8) & 0xF) << 4) | (lo.astype(jnp.uint8) & 0xF)
+
+
+def unpack_nibble_pair(packed: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    lo = (packed & 0xF).astype(jnp.uint8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.uint8)
+    return lo, hi

@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pim_matmul.pim_matmul import pim_matmul_pallas
+from repro.kernels.pim_matmul.ref import pim_matmul_ref
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@pytest.mark.parametrize("pa,pw,m,k,n", [
+    (1, 1, 8, 32, 16),
+    (2, 2, 128, 512, 128),     # MXU-aligned tile exactly
+    (2, 1, 100, 300, 70),      # ragged -> padding path
+    (1, 2, 8, 1024, 256),
+    (2, 2, 1, 16, 1),          # degenerate
+])
+def test_pim_matmul_kernel_exact(pa, pw, m, k, n):
+    key = jax.random.PRNGKey(pa * 1000 + pw * 100 + m)
+    a = jax.random.randint(key, (pa, m, k), -15, 16, dtype=jnp.int8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (pw, k, n), -15, 16,
+                           dtype=jnp.int8)
+    out = pim_matmul_pallas(a, w, interpret=True)
+    assert out.dtype == jnp.int32
+    assert jnp.array_equal(out, pim_matmul_ref(a, w))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 64), (128, 128, 128)])
+def test_pim_matmul_kernel_block_shapes(bm, bn, bk):
+    key = jax.random.PRNGKey(7)
+    a = jax.random.randint(key, (2, 96, 192), -15, 16, dtype=jnp.int8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (2, 192, 64), -15, 16,
+                           dtype=jnp.int8)
+    out = pim_matmul_pallas(a, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    assert jnp.array_equal(out, pim_matmul_ref(a, w))
+
+
+@pytest.mark.parametrize("bh,l,p,n,q", [
+    (2, 128, 16, 8, 32),
+    (1, 64, 8, 128, 64),
+    (3, 96, 32, 16, 32),
+    (1, 32, 64, 64, 32),
+])
+def test_ssd_kernel_matches_sequential(bh, l, p, n, q):
+    ks = jax.random.split(jax.random.PRNGKey(bh * l), 4)
+    x = jax.random.normal(ks[0], (bh, l, p))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (bh, l)) + 2.0)
+    b = jax.random.normal(ks[2], (bh, l, n)) / np.sqrt(n)
+    c = jax.random.normal(ks[3], (bh, l, n)) / np.sqrt(n)
+    y_ref, s_ref = ssd_scan_ref(x, a, b, c)
+    y_ker, s_ker = ssd_scan_pallas(x, a, b, c, chunk=q, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_chunked_jnp_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (2, 256, 32))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (2, 256)) + 2.0)
+    b = jax.random.normal(ks[2], (2, 256, 16)) / 4.0
+    c = jax.random.normal(ks[3], (2, 256, 16)) / 4.0
+    y_ref, s_ref = ssd_scan_ref(x, a, b, c)
+    for chunk in (32, 64, 128, 256):
+        y, s = ssd_chunked_ref(x, a, b, c, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_kernel_long_decay_stability():
+    """Near-zero decays (long-range forgetting) stay finite in log-space."""
+    bh, l, p, n = 1, 64, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (bh, l, p))
+    a = jnp.full((bh, l), 1e-6)
+    b = jax.random.normal(ks[1], (bh, l, n))
+    c = jax.random.normal(ks[2], (bh, l, n))
+    y, s = ssd_scan_pallas(x, a, b, c, chunk=32, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(s)))
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,causal,win,pre", [
+    (2, 128, 4, 2, 32, True, 0, 0),
+    (1, 128, 8, 1, 16, True, 0, 0),      # MQA
+    (2, 64, 4, 4, 32, False, 0, 0),      # bidirectional (encoder)
+    (1, 128, 4, 2, 16, True, 40, 0),     # sliding window
+    (1, 128, 4, 2, 16, True, 0, 24),     # prefix-LM
+    (1, 128, 4, 2, 16, True, 24, 16),    # window + prefix
+])
+def test_flash_attention_kernel(b, s, h, kv, d, causal, win, pre):
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(s + h + d), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal, win, pre, bq=32, bk=32,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal, win, pre)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, bq=32, bk=32, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)

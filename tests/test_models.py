@@ -1,0 +1,146 @@
+"""Model-stack correctness: per-arch smoke (reduced configs), attention
+equivalences, SSM step/scan duality, MoE dispatch conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.attention import (_project_qkv, attention_init,
+                                    blockwise_attention, full_attention)
+from repro.models.lm import decode_step, forward, init_lm, prefill
+from repro.models.moe import moe_apply, moe_init, moe_reference
+from repro.models.ssm import ssm_apply, ssm_init, ssm_init_cache, ssm_step
+
+ARCHS = list_archs()
+
+
+def _make_batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.vision_dim))
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward(arch):
+    """Reduced config of the same family: one forward step on CPU with
+    shape + finiteness assertions (assignment requirement)."""
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64, vocab=128)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    batch = _make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = forward(params, cfg, batch)
+    b, s = batch["tokens"].shape
+    expected_s = s + (cfg.vision_tokens or 0)
+    assert logits.shape == (b, expected_s, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "mamba2-370m", "hymba-1.5b",
+                                  "qwen3-moe-30b-a3b", "whisper-medium"])
+def test_arch_prefill_decode_matches_forward(arch):
+    """Teacher forcing: prefill+decode logits == forward logits."""
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64, vocab=128)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 12
+    batch = _make_batch(cfg, jax.random.PRNGKey(1), b, s)
+    toks = batch["tokens"]
+    extra = cfg.vision_tokens if cfg.vision_tokens else 0
+    logits, _ = forward(params, cfg, batch)
+    half = s // 2
+    b1 = dict(batch, tokens=toks[:, :half])
+    lg, cache = prefill(params, cfg, b1, max_len=s + extra,
+                        cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits[:, extra + half - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for t in range(half, s - 1):
+        lg, cache = decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                jnp.int32(extra + t))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits[:, extra + t]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_attention_equivalence():
+    ap = attention_init(jax.random.PRNGKey(0), 64, 4, 2, 16, qk_norm=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+    pos = jnp.broadcast_to(jnp.arange(128), (2, 128))
+    q, k, v = _project_qkv(ap, x, 4, 2, 16, pos, 1e4)
+    for window in (0, 17, 64):
+        for prefix in (0, 10):
+            o_full = full_attention(q, k, v, pos, window, True, prefix)
+            o_blk = blockwise_attention(q, k, v, pos, window, True, 32,
+                                        prefix)
+            np.testing.assert_allclose(np.asarray(o_blk),
+                                       np.asarray(o_full),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_gemma3_window_pattern():
+    cfg = get_config("gemma3-1b")
+    wins = [cfg.layer_window(i) for i in range(cfg.num_layers)]
+    assert wins[5] == 0 and wins[11] == 0          # every 6th global
+    assert all(w == 512 for i, w in enumerate(wins) if (i + 1) % 6 != 0)
+    assert wins.count(0) == cfg.num_layers // 6
+
+
+def test_ssm_scan_vs_step():
+    sp = ssm_init(jax.random.PRNGKey(3), 32, 16, expand=2, head_dim=16)
+    xs = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32))
+    yfull = ssm_apply(sp, xs, 16, expand=2, head_dim=16,
+                      backend="sequential")
+    cache = ssm_init_cache(2, 32, 16, expand=2, head_dim=16)
+    ys = []
+    for t in range(8):
+        yt, cache = ssm_step(sp, xs[:, t:t + 1], cache, 16, expand=2,
+                             head_dim=16)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(yfull), rtol=1e-4, atol=1e-5)
+
+
+def test_ssm_prefill_state_matches_step_cache():
+    sp = ssm_init(jax.random.PRNGKey(3), 32, 16, expand=2, head_dim=16)
+    xs = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32))
+    _, (s_fin, tails) = ssm_apply(sp, xs, 16, expand=2, head_dim=16,
+                                  return_state=True)
+    cache = ssm_init_cache(2, 32, 16, expand=2, head_dim=16)
+    for t in range(8):
+        _, cache = ssm_step(sp, xs[:, t:t + 1], cache, 16, expand=2,
+                            head_dim=16)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(cache["state"]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tails),
+                               np.asarray(cache["conv_tail"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_moe_local_matches_dense_reference():
+    p = moe_init(jax.random.PRNGKey(0), 32, 8, 16, shared_experts=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+    np.testing.assert_allclose(np.asarray(moe_apply(p, x, 2)),
+                               np.asarray(moe_reference(p, x, 2)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_aux_losses_populated():
+    p = moe_init(jax.random.PRNGKey(0), 32, 8, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+    aux = {}
+    moe_apply(p, x, 2, aux)
+    assert float(aux["moe_lb_loss"]) > 0.0
+    assert float(aux["moe_z_loss"]) > 0.0
+
+
+def test_vocab_padding_masked():
+    cfg = get_config("hymba-1.5b").reduced(num_layers=1, d_model=32,
+                                           vocab=100)  # pads to 256
+    assert cfg.padded_vocab == 256
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    batch = _make_batch(cfg, jax.random.PRNGKey(1), 1, 4)
+    logits, _ = forward(params, cfg, batch)
+    assert bool(jnp.all(logits[..., cfg.vocab_size:] < -1e20))

@@ -1,0 +1,116 @@
+"""Reproduction of the paper's quantitative and qualitative claims:
+cell DSE (Fig. 2), grouping (Fig. 7), power (Fig. 8), latency structure
+(Fig. 9), platform ratios (Figs. 11-12 + headline), Table II params."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.baselines import PAPER_RATIOS, average_ratios
+from repro.core.cell import CellDesign, best_design
+from repro.core.perfmodel import (best_grouping, grouping_sweep, network_perf,
+                                  power_breakdown_w, total_power_w)
+from repro.core.workloads import (TABLE2_PARAM_BUILDERS, TABLE2_PARAMS,
+                                  WORKLOADS, total_params)
+
+
+# --- Fig. 2: OPCM cell design space ---------------------------------------
+def test_cell_design_point_feasible():
+    d = CellDesign()  # (0.48 um, 20 nm) — the paper's point
+    assert float(d.scatter_change(True)) < 0.05
+    assert float(d.scatter_change(False)) < 0.05
+    assert float(d.contrast()) > 0.90          # paper: ~96%
+
+
+def test_cell_best_design_near_paper():
+    w = jnp.arange(0.30, 0.71, 0.02)
+    t = jnp.arange(10.0, 40.1, 2.5)
+    bw, bt, bc = best_design(w, t)
+    assert abs(bw - 0.48) <= 0.05 and abs(bt - 20.0) <= 2.5
+    assert bc > 0.90
+
+
+def test_cell_16_levels_monotone():
+    lv = CellDesign().levels(16)
+    assert lv.shape == (16,)
+    assert bool(jnp.all(jnp.diff(lv) > 0))     # distinct, ordered levels
+
+
+# --- Fig. 7: subarray grouping --------------------------------------------
+def test_grouping_optimum_is_16():
+    assert best_grouping() == 16
+
+
+def test_grouping_tradeoffs_monotone():
+    pts = grouping_sweep()
+    assert all(a.power_w < b.power_w for a, b in zip(pts, pts[1:]))
+    assert all(a.mac_throughput < b.mac_throughput
+               for a, b in zip(pts, pts[1:]))
+    assert all(a.rows_for_memory > b.rows_for_memory
+               for a, b in zip(pts, pts[1:]))
+
+
+# --- Fig. 8: power ----------------------------------------------------------
+def test_power_total_and_breakdown():
+    assert abs(total_power_w() - 55.9) < 0.2   # paper: 55.9 W max
+    bd = power_breakdown_w()
+    assert abs(sum(bd.values()) - total_power_w()) < 1e-6
+    # MDL array + E-O interface dominate (paper §V.B)
+    dominant = sorted(bd, key=bd.get, reverse=True)[:2]
+    assert set(dominant) == {"mdl_array", "eo_interface"}
+
+
+# --- Fig. 9: latency structure ----------------------------------------------
+@pytest.fixture(scope="module")
+def perfs():
+    return {name: network_perf(name, fn(), weight_bits=4, act_bits=4)
+            for name, fn in WORKLOADS.items()}
+
+
+def test_writeback_dominates_regular_convnets(perfs):
+    for name in ("resnet18", "vgg16", "squeezenet"):
+        assert perfs[name].writeback_s > perfs[name].processing_s, name
+
+
+def test_1x1_kernel_penalty(perfs):
+    # MobileNet: processing exceeds writeback (paper §V.C)
+    assert perfs["mobilenet"].processing_s > perfs["mobilenet"].writeback_s
+    # both 1x1-heavy models process slower than ResNet18, MobileNet worst
+    assert perfs["mobilenet"].processing_s > \
+        perfs["inceptionv2"].processing_s > perfs["resnet18"].processing_s
+
+
+def test_inception_total_below_resnet(perfs):
+    assert perfs["inceptionv2"].latency_s < perfs["resnet18"].latency_s
+
+
+def test_8bit_doubles_writeback_quadruples_processing():
+    p4 = network_perf("resnet18", WORKLOADS["resnet18"](), weight_bits=4,
+                      act_bits=4)
+    p8 = network_perf("resnet18", WORKLOADS["resnet18"](), weight_bits=8,
+                      act_bits=8)
+    assert abs(p8.processing_s / p4.processing_s - 4.0) < 0.01  # TDM passes
+    assert abs(p8.writeback_s / p4.writeback_s - 2.0) < 0.01    # 2x cells
+
+
+# --- Figs. 11-12 + headline ratios -----------------------------------------
+def test_platform_ratios_match_paper():
+    r = average_ratios()
+    for plat, targets in PAPER_RATIOS.items():
+        got = r[plat]
+        assert abs(got["epb"] - targets["epb"]) / targets["epb"] < 0.15, \
+            (plat, got["epb"], targets["epb"])
+        assert abs(got["fps_per_watt"] - targets["fps_per_watt"]) / \
+            targets["fps_per_watt"] < 0.15, (plat, got["fps_per_watt"])
+
+
+def test_headline_throughput_vs_best_prior():
+    # §I: "2.98x higher throughput ... than the best-known prior work"
+    r = average_ratios()
+    assert abs(r["PhPIM"]["throughput"] - 2.98) < 0.30
+
+
+# --- Table II ---------------------------------------------------------------
+def test_table2_parameter_counts():
+    for name, builder in TABLE2_PARAM_BUILDERS.items():
+        p = total_params(builder())
+        ref = TABLE2_PARAMS[name]
+        assert abs(p - ref) / ref < 0.08, (name, p, ref)

@@ -1,0 +1,141 @@
+"""Substrate tests: optimizer, grad compression, checkpointing, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.ckpt import (cleanup_old, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, LMDataIterator, synthetic_tokens
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               schedule_lr)
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     init_error_state)
+
+
+def test_adamw_reduces_quadratic():
+    w = jnp.array([3.0, -2.0, 1.0])
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant",
+                      warmup_steps=0, total_steps=100)
+    state = adamw_init(w)
+    for _ in range(100):
+        g = 2 * w
+        w, state, _ = adamw_update(cfg, g, state, w)
+    assert float(jnp.linalg.norm(w)) < 0.1
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[2] > lrs[3] > lrs[4] >= 0.1 - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 30))
+def test_grad_compression_error_feedback(seed):
+    """With error feedback, the accumulated compressed sum tracks the true
+    gradient sum (residual stays bounded by one quantization step)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    err = init_error_state(g)
+    total_true = jnp.zeros_like(g)
+    total_comp = jnp.zeros_like(g)
+    for i in range(8):
+        gi = g * (0.5 + 0.1 * i)
+        codes, scales, err = compress_grads(gi, err, bits=8)
+        total_comp += decompress_grads(codes, scales)
+        total_true += gi
+    resid = jnp.max(jnp.abs(total_comp + err - total_true))
+    assert float(resid) < 1e-4
+
+
+def test_compression_reduces_bytes():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    codes, scales, _ = compress_grads(g, None, bits=8)
+    assert codes.dtype == jnp.int8      # 4x smaller than f32 on the wire
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "s": jnp.zeros((), jnp.int32)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, tree, extras={"data_step": 3})
+    save_checkpoint(d, 7, tree, extras={"data_step": 7})
+    assert latest_step(d) == 7
+    restored, step, extras = restore_checkpoint(d, tree)
+    assert step == 7 and extras["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_cleanup_keeps_latest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"x": jnp.ones((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, tree)
+    cleanup_old(d, keep=2)
+    assert latest_step(d) == 5
+    restored, step, _ = restore_checkpoint(d, tree, step=4)
+    assert step == 4
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Restore with explicit shardings (mesh change path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _, _ = restore_checkpoint(d, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 8))
+def test_data_deterministic_and_sharded(step, shards):
+    cfg0 = DataConfig(seed=1, vocab_size=64, seq_len=32, global_batch=8,
+                      num_shards=1, shard_id=0)
+    full = synthetic_tokens(cfg0, step)
+    again = synthetic_tokens(cfg0, step)
+    np.testing.assert_array_equal(full, again)        # determinism
+    if 8 % shards == 0:
+        parts = [synthetic_tokens(
+            DataConfig(seed=1, vocab_size=64, seq_len=32, global_batch=8,
+                       num_shards=shards, shard_id=i), step)
+            for i in range(shards)]
+        assert all(p.shape[0] == 8 // shards for p in parts)
+
+
+def test_data_iterator_checkpointable():
+    cfg = DataConfig(seed=0, vocab_size=32, seq_len=8, global_batch=2)
+    mc = get_config("qwen3-4b").reduced()
+    it = LMDataIterator(cfg, mc)
+    b0, b1 = next(it), next(it)
+    it2 = LMDataIterator(cfg, mc, start_step=1)
+    np.testing.assert_array_equal(next(it2)["tokens"], b1["tokens"])
+
+
+def test_data_is_learnable_structure():
+    """The n-gram synthetic language has sub-uniform conditional entropy."""
+    cfg = DataConfig(seed=0, vocab_size=64, seq_len=256, global_batch=8)
+    toks = synthetic_tokens(cfg, 0)
+    # successor-distribution entropy given prev token should be far below
+    # log(vocab) thanks to the 90% deterministic table
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    match = np.mean([max(np.bincount(v).max() / len(v), 0)
+                     for v in pairs.values() if len(v) >= 5])
+    assert match > 0.5

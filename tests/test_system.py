@@ -1,0 +1,130 @@
+"""End-to-end behaviour: training convergence, checkpoint-restart
+continuity, serving consistency, CNN-on-PIM inference, dry-run machinery."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pim import PimConfig
+from repro.core.workloads import resnet18
+from repro.data.pipeline import synthetic_images
+from repro.models.cnn import cnn_forward, init_cnn
+
+
+def test_train_loss_decreases():
+    from repro.launch.train import train_loop
+    res = train_loop("qwen2.5-3b", steps=25, batch=4, seq=64, layers=2,
+                     d_model=64, log_every=5)
+    assert res["last_loss"] < res["first_loss"]
+
+
+def test_train_checkpoint_restart_continuity(tmp_path):
+    """Interrupt + resume == uninterrupted run (same data, same state)."""
+    from repro.launch.train import train_loop
+    d = str(tmp_path / "ck")
+    train_loop("qwen3-4b", steps=6, batch=2, seq=32, layers=1, d_model=32,
+               ckpt_dir=d, ckpt_every=3, log_every=1)      # stops at 6
+    # fresh run to 10 with resume from step 6's checkpoint
+    res_resumed = train_loop("qwen3-4b", steps=10, batch=2, seq=32, layers=1,
+                             d_model=32, ckpt_dir=d, ckpt_every=100,
+                             log_every=1)
+    res_straight = train_loop("qwen3-4b", steps=10, batch=2, seq=32,
+                              layers=1, d_model=32, log_every=1)
+    assert abs(res_resumed["last_loss"] - res_straight["last_loss"]) < 5e-2
+
+
+def test_train_with_grad_compression():
+    from repro.launch.train import train_loop
+    res = train_loop("gemma3-1b", steps=20, batch=4, seq=64, layers=2,
+                     d_model=64, compress_bits=8, log_every=5)
+    assert res["last_loss"] < res["first_loss"]
+
+
+def test_serve_greedy_decode():
+    from repro.launch.serve import serve
+    res = serve("qwen2.5-3b", batch=2, prompt_len=12, gen=6, layers=2,
+                d_model=64)
+    assert res["generated"].shape == (2, 6)
+    assert res["generated"].dtype == np.int32
+
+
+def test_serve_pim_path_reports_opima_estimate():
+    from repro.launch.serve import serve
+    res = serve("qwen3-4b", batch=1, prompt_len=8, gen=4, layers=2,
+                d_model=64, pim=True)
+    assert res["opima_latency_ms_per_token_batch"] > 0
+    assert res["opima_power_w"] == pytest.approx(55.9, abs=0.2)
+
+
+def test_cnn_pim_inference_close_to_quantized():
+    """PIM-executed CNN logits track the fake-quantized reference. Note the
+    PIM path quantizes *activations* too (W-bit/A-bit), while quant_bits
+    only fake-quantizes weights — so w8a8 PIM vs int8-weight reference is
+    the tight comparison; w4a4 (the paper's operating point) drifts more
+    through 20 layers of activation quantization but must preserve the
+    decision structure."""
+    layers = resnet18(4, 16, width=0.25)
+    params = init_cnn(layers, jax.random.PRNGKey(0))
+    x, y = synthetic_images(0, 8, 16, 4, noise=0.05)
+    logits_q8 = cnn_forward(params, layers, jnp.asarray(x), quant_bits=8)
+    logits_p8 = cnn_forward(params, layers, jnp.asarray(x),
+                            pim=PimConfig(weight_bits=8, act_bits=8))
+    corr8 = np.corrcoef(np.asarray(logits_q8).ravel(),
+                        np.asarray(logits_p8).ravel())[0, 1]
+    assert corr8 > 0.95
+    logits_q4 = cnn_forward(params, layers, jnp.asarray(x), quant_bits=4)
+    logits_p4 = cnn_forward(params, layers, jnp.asarray(x),
+                            pim=PimConfig(weight_bits=4, act_bits=4))
+    assert logits_p4.shape == (8, 4)
+    corr4 = np.corrcoef(np.asarray(logits_q4).ravel(),
+                        np.asarray(logits_p4).ravel())[0, 1]
+    assert corr4 > 0.6
+    agree = float(jnp.mean(jnp.argmax(logits_q4, -1) ==
+                           jnp.argmax(logits_p4, -1)))
+    assert agree >= 0.5
+
+
+# --- dry-run machinery (shape logic only; full sweep runs out-of-band) -----
+def test_input_specs_all_cells_defined():
+    from repro.launch.dryrun import SHAPES, cell_is_applicable, input_specs
+    from repro.configs.archs import ARCH_IDS
+    n_ok, n_skip = 0, 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_is_applicable(cfg, shape)
+            if not ok:
+                n_skip += 1
+                assert "sub-quadratic" in reason
+                continue
+            n_ok += 1
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(v, "shape") for v in specs.values())
+    assert n_ok + n_skip == 40          # the full assignment grid
+    assert n_skip == 7                  # 7 documented long_500k skips
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes_from_hlo
+    hlo = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %add.3)
+  %ag = bf16[4,256]{1,0} all-gather(bf16[4,64]{1,0} %p), dimensions={1}
+  %x = f32[2,2]{1,0} add(f32[2,2]{1,0} %a, f32[2,2]{1,0} %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 4 * 256 * 2
+    assert out["total"] == out["all-reduce"] + out["all-gather"]
+
+
+def test_fit_spec_drops_indivisible():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.train import fit_spec
+    mesh = jax.make_mesh((1,), ("model",))
+    # trivially divisible on 1-sized axis
+    assert tuple(fit_spec(mesh, P("model"), (7,))) == ("model",)
