@@ -115,17 +115,21 @@ def adc_ablation() -> List[Row]:
 
 def kernel_bench() -> List[Row]:
     """Kernel micro-bench (CPU wall clock — relative only): bit-sliced PIM
-    matmul jnp path vs dense float matmul, SSD chunked vs sequential."""
+    matmul (planned weights; default fused-Pallas and jnp fallback paths)
+    vs dense float matmul, SSD chunked vs sequential."""
     from repro.core.pim import PimConfig, pim_matmul, prepare_weights
     from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_scan_ref
     rows: List[Row] = []
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
     w = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
     cfg = PimConfig(weight_bits=4, act_bits=4)
+    cfg_jnp = PimConfig(weight_bits=4, act_bits=4, use_pallas=False)
     wq = prepare_weights(w, cfg)
     f_pim = jax.jit(lambda a: pim_matmul(a, wq, cfg))
+    f_jnp = jax.jit(lambda a: pim_matmul(a, wq, cfg_jnp))
     f_ref = jax.jit(lambda a: a @ w)
-    for name, fn in (("pim_w4a4", f_pim), ("dense_f32", f_ref)):
+    for name, fn in (("pim_w4a4", f_pim), ("pim_w4a4_jnp", f_jnp),
+                     ("dense_f32", f_ref)):
         fn(x).block_until_ready()
         t0 = time.perf_counter()
         for _ in range(20):
@@ -149,8 +153,15 @@ def kernel_bench() -> List[Row]:
     return rows
 
 
+def pim_plan_bench() -> List[Row]:
+    """Weight-stationary plan-once/execute-many speedup on decode-shaped
+    matmuls (see benchmarks/pim_plan_bench.py)."""
+    from benchmarks.pim_plan_bench import plan_execute_bench
+    return plan_execute_bench()
+
+
 ALL_BENCHMARKS = [
     fig2_cell_dse, fig7_grouping, fig8_power, fig9_latency,
     fig10_photonic_latency, fig11_epb, fig12_fpsw, table2_quantization,
-    adc_ablation, kernel_bench,
+    adc_ablation, kernel_bench, pim_plan_bench,
 ]

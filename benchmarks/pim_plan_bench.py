@@ -1,0 +1,72 @@
+"""Plan-once / execute-many micro-benchmark for the weight-stationary
+PIM engine.
+
+Measures repeated decode-shaped matmuls (small M, LM-projection K x N) in
+two regimes:
+
+  * ``replan_per_call`` — the pre-refactor behaviour: quantize + nibble-
+    decompose + pad the weights inside every call (weights "move" every
+    step, the internal-data-movement overhead PIM exists to eliminate).
+  * ``planned``         — program the weights once with ``prepare_weights``
+    and drive activations past the stationary planes each step.
+
+Both run the identical exact datapath, so the delta is pure weight-plane
+conversion overhead. CPU wall clock — relative numbers only.
+
+  PYTHONPATH=src python benchmarks/pim_plan_bench.py
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+# decode step of a reduced LM projection: batch rows x (d_model, d_ff)
+DECODE_M, DECODE_K, DECODE_N = 8, 512, 1024
+WARMUP, ITERS = 2, 20
+
+
+def _time(fn, *args) -> float:
+    for _ in range(WARMUP):
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / ITERS * 1e6
+
+
+def plan_execute_bench() -> List[Row]:
+    from repro.core.pim import PimConfig, pim_matmul, prepare_weights
+    rows: List[Row] = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (DECODE_M, DECODE_K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (DECODE_K, DECODE_N))
+    for bits in (4, 8):
+        cfg = PimConfig(weight_bits=bits, act_bits=bits)
+        plan = prepare_weights(w, cfg)
+        f_planned = jax.jit(lambda a, p=plan, c=cfg: pim_matmul(a, p, c))
+        f_replan = jax.jit(
+            lambda a, ww, c=cfg: pim_matmul(a, prepare_weights(ww, c), c))
+        t_planned = _time(f_planned, x)
+        t_replan = _time(f_replan, x, w)
+        rows += [
+            (f"pim_plan.w{bits}a{bits}.planned.us_per_call", t_planned,
+             "weights stationary (prepare once)"),
+            (f"pim_plan.w{bits}a{bits}.replan_per_call.us_per_call",
+             t_replan, "pre-refactor: decompose every call"),
+            (f"pim_plan.w{bits}a{bits}.speedup", t_replan / t_planned,
+             ">1 expected: plane decomposition amortized"),
+        ]
+    return rows
+
+
+def main() -> None:
+    print("name,value,derived")
+    for name, value, derived in plan_execute_bench():
+        print(f"{name},{value:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
-"""Benchmark harness: one function per paper table/figure.
+"""Benchmark harness: one function per paper table/figure (plus engine
+micro-benches such as the weight-stationary plan-once/execute-many sweep).
 
 Prints ``name,value,derived`` CSV. Usage:
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig9 fig11 # substring filter
+  PYTHONPATH=src python -m benchmarks.run pim_plan   # planned-weight bench
 """
 from __future__ import annotations
 

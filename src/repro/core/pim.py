@@ -1,22 +1,45 @@
-"""The OPIMA PIM execution engine (paper §IV.C–D).
+"""The OPIMA PIM execution engine (paper §IV.C–D) — weight-stationary.
 
 This is the paper's datapath as a composable JAX op:
 
-  1. Weights are quantized (per-output-channel symmetric) and nibble-
-     decomposed into 4-bit planes — one OPCM cell per nibble (§IV.C.4 TDM).
+  1. Weights are *programmed once* into 'OPCM': :func:`prepare_weights`
+     quantizes (per-output-channel symmetric), nibble-decomposes into 4-bit
+     planes — one OPCM cell per nibble (§IV.C.4 TDM) — and pre-pads the
+     planes to the Pallas kernel's tile multiples. The result is a
+     :class:`PlannedWeights` pytree; plane decomposition and padding happen
+     at programming time, **not** per matmul call (the PIM property: weights
+     stay stationary in the array, only activations move).
   2. Activations are dynamically quantized per row — the MDL array re-tunes
      per driven vector (§IV.C.2) — and nibble-decomposed the same way.
   3. Every (act-nibble, weight-nibble) plane pair is one "one-shot" array
      multiply; partial products accumulate over the K (column/wavelength)
      dimension — WDM in-waveguide interference.
   4. The aggregation unit recombines planes with shift-and-add and rescales.
+     In the default exact mode this runs inside the Pallas kernel's fused
+     epilogue: per-row act-scale × per-column weight-scale dequantization
+     (+ optional bias) is applied to the int32 accumulator tile in VMEM, so
+     the accumulator never round-trips through a separate float pass. The
+     dequantized output is bit-for-bit equal to
+     :func:`reference_quantized_matmul`; a fused bias lands within 1 ulp of
+     the two-step reference (the kernel's mul+add contracts to an FMA —
+     one rounding instead of two).
 
 Two fidelity modes:
-  * ``exact``  — bit-exact integer arithmetic (what the TPU deployment uses;
-    routed through the Pallas kernel, or its jnp-identical fallback).
+  * ``exact``  — bit-exact integer arithmetic, routed through the Pallas
+    kernel by default (``use_pallas=True``, interpret mode on CPU); a
+    jnp-identical fallback is kept for ``use_pallas=False``.
   * ``analog`` — models the physical readout: per-WDM-chunk photodetector
     sums pass a transmission-noise + ADC-quantization stage before the
     digital shift-and-add (accuracy-study mode; pure jnp).
+
+API:
+  prepare_weights(w, cfg)            -> PlannedWeights   (program once)
+  plan_from_qtensor(w_q, cfg)        -> PlannedWeights   (adopt existing codes)
+  pim_matmul(x, planned, cfg, bias=) -> float32          (execute many)
+  prepare_depthwise_weights(w, cfg)  -> PlannedDepthwiseWeights
+  pim_depthwise_matmul(x, planned)   -> float32          (grouped convs)
+  reference_quantized_matmul(x, w_q) -> oracle the exact mode must match
+    bit-for-bit.
 
 The same engine is used by the CNN reproduction workloads and as the
 serving-path matmul of the assigned LM architectures (weights stationary in
@@ -25,7 +48,7 @@ serving-path matmul of the assigned LM architectures (weights stationary in
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +75,8 @@ class PimConfig:
     analog: bool = False          # enable the analog readout model
     read_noise_sigma: float = 0.0  # relative transmission read noise; if 0
                                    # and analog, uses the cell-DSE implied one
-    use_pallas: bool = False      # route exact mode through the Pallas kernel
+    use_pallas: bool = True       # exact mode routes through the Pallas
+                                  # kernel (fused dequant epilogue) by default
     interpret: bool = True        # Pallas interpret mode (CPU container)
 
     @property
@@ -67,11 +91,112 @@ class PimConfig:
 DEFAULT_PIM = PimConfig()
 
 
-def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM) -> QTensor:
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PlannedWeights:
+    """A weight matrix programmed into 'OPCM': quantized codes plus the
+    precomputed int8 nibble planes, pre-padded to the kernel's tile
+    multiples. Built once by :func:`prepare_weights`; every subsequent
+    :func:`pim_matmul` drives activations past these stationary planes
+    without re-running the decomposition.
+
+    Registered as a pytree so plans flow through jit / scan / vmap — the
+    serving stack stores one stacked plan per scanned layer.
+    """
+
+    values: jax.Array            # int8 codes (K, N), unpadded
+    scale: jax.Array             # f32 (1, N), unpadded
+    planes: jax.Array            # int8 (Pw, Kp, Np), padded to tile multiples
+    padded_scale: jax.Array      # f32 (1, Np) — kernel-epilogue weight scale
+    bits: int = 4                # logical weight bit width
+    k: int = 0                   # logical contraction dim (planes[:, :k])
+    n: int = 0                   # logical output dim (planes[..., :n])
+    cfg: PimConfig = DEFAULT_PIM  # operating point the plan was built for
+
+    @property
+    def shape(self):
+        return (self.k, self.n)
+
+    # pytree plumbing -----------------------------------------------------
+    def tree_flatten(self):
+        return ((self.values, self.scale, self.planes, self.padded_scale),
+                (self.bits, self.k, self.n, self.cfg))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scale, planes, padded_scale = children
+        return cls(values=values, scale=scale, planes=planes,
+                   padded_scale=padded_scale, bits=aux[0], k=aux[1],
+                   n=aux[2], cfg=aux[3])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PlannedDepthwiseWeights:
+    """Per-channel planned weights for grouped (depthwise) convolutions:
+    each channel's (kh*kw,) filter is its own stationary column."""
+
+    values: jax.Array            # int8 codes (K, C)
+    scale: jax.Array             # f32 (1, C)
+    planes: jax.Array            # int8 (Pw, K, C)
+    bits: int = 4
+    cfg: PimConfig = DEFAULT_PIM
+
+    def tree_flatten(self):
+        return ((self.values, self.scale, self.planes), (self.bits, self.cfg))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scale, planes = children
+        return cls(values=values, scale=scale, planes=planes, bits=aux[0],
+                   cfg=aux[1])
+
+
+def plan_from_qtensor(w_q: QTensor, cfg: PimConfig = DEFAULT_PIM
+                      ) -> PlannedWeights:
+    """Plan already-quantized (K, N) codes: decompose into nibble planes and
+    pre-pad to the kernel tile multiples. This is the single place weight
+    plane decomposition happens."""
+    from repro.kernels.pim_matmul.pim_matmul import kernel_tiles
+    k, n = w_q.values.shape
+    planes = to_nibbles(w_q.values, w_q.bits)              # (Pw, K, N)
+    _, bn, bk = kernel_tiles(1, k, n)
+    pad_k, pad_n = (-k) % bk, (-n) % bn
+    if pad_k or pad_n:
+        planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
+    padded_scale = jnp.pad(jnp.broadcast_to(w_q.scale, (1, n)),
+                           ((0, 0), (0, pad_n)))
+    return PlannedWeights(values=w_q.values, scale=w_q.scale, planes=planes,
+                          padded_scale=padded_scale, bits=w_q.bits, k=k, n=n,
+                          cfg=cfg)
+
+
+def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM
+                    ) -> PlannedWeights:
     """Program a weight matrix into 'OPCM': per-output-channel symmetric
-    quantization. w: (K, N) -> QTensor with codes (K, N), scale (1, N)."""
+    quantization + nibble decomposition + kernel pre-padding, all once.
+    w: (K, N) -> PlannedWeights with codes (K, N), scale (1, N)."""
     assert w.ndim == 2, "prepare_weights expects (K, N)"
-    return quantize(w, bits=cfg.weight_bits, axis=(0,))
+    return plan_from_qtensor(quantize(w, bits=cfg.weight_bits, axis=(0,)),
+                             cfg)
+
+
+def prepare_depthwise_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM
+                              ) -> PlannedDepthwiseWeights:
+    """Program depthwise filters (K=kh*kw, C) with per-channel scales."""
+    assert w.ndim == 2, "prepare_depthwise_weights expects (K, C)"
+    w_q = quantize(w, bits=cfg.weight_bits, axis=(0,))
+    return PlannedDepthwiseWeights(
+        values=w_q.values, scale=w_q.scale,
+        planes=to_nibbles(w_q.values, w_q.bits), bits=w_q.bits, cfg=cfg)
+
+
+def _coerce_plan(w_q: Union[PlannedWeights, QTensor], cfg: PimConfig
+                 ) -> PlannedWeights:
+    if isinstance(w_q, PlannedWeights):
+        return w_q
+    # Legacy QTensor callers: plan on the fly (decomposition per call).
+    return plan_from_qtensor(w_q, cfg)
 
 
 def _plane_matmuls(a_planes: jax.Array, w_planes: jax.Array) -> jax.Array:
@@ -147,28 +272,41 @@ def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
     return jnp.sum(digitized, axis=2)  # digital accumulation over chunks
 
 
-def pim_matmul(x: jax.Array, w_q: QTensor, cfg: PimConfig = DEFAULT_PIM,
-               rng: Optional[jax.Array] = None,
-               act_scale_axis: int = -1) -> jax.Array:
-    """Matrix multiply through the OPIMA PIM datapath.
-
-    Args:
-      x: float activations, shape (..., K).
-      w_q: prepared weights (K, N) from :func:`prepare_weights`.
-      cfg: PIM operating point.
-      rng: PRNG key, required if ``cfg.analog`` and noise sigma > 0.
-      act_scale_axis: axis for dynamic activation scales (per-row default).
-
-    Returns:
-      float32 result of shape (..., N), de-quantized.
-    """
+def _check_widths(cfg: PimConfig) -> None:
     if cfg.weight_bits > 8 or cfg.act_bits > 8:
         raise NotImplementedError(
             "exact int32 shift-and-add supports operand widths <= 8 bits "
             "(the paper evaluates 4b and 8b); wider operands would need an "
             "int64/float accumulation path")
+
+
+def pim_matmul(x: jax.Array, w_q: Union[PlannedWeights, QTensor],
+               cfg: Optional[PimConfig] = None,
+               rng: Optional[jax.Array] = None,
+               act_scale_axis: int = -1,
+               bias: Optional[jax.Array] = None) -> jax.Array:
+    """Matrix multiply through the OPIMA PIM datapath.
+
+    Args:
+      x: float activations, shape (..., K).
+      w_q: planned weights (K, N) from :func:`prepare_weights` (a legacy
+        :class:`QTensor` is planned on the fly).
+      cfg: PIM operating point; defaults to the plan's own config.
+      rng: PRNG key, required if ``cfg.analog`` and noise sigma > 0.
+      act_scale_axis: axis for dynamic activation scales (per-row default).
+      bias: optional (N,) float bias, applied inside the kernel's fused
+        epilogue on the Pallas path (after dequantization on all paths).
+
+    Returns:
+      float32 result of shape (..., N), de-quantized (+ bias).
+    """
+    if cfg is None:
+        cfg = w_q.cfg if isinstance(w_q, PlannedWeights) else DEFAULT_PIM
+    _check_widths(cfg)
+    plan = _coerce_plan(w_q, cfg)
     orig_shape = x.shape
     k = orig_shape[-1]
+    assert k == plan.k, f"contraction mismatch {k} vs plan {plan.k}"
     m = 1
     for d in orig_shape[:-1]:
         m *= d
@@ -176,9 +314,9 @@ def pim_matmul(x: jax.Array, w_q: QTensor, cfg: PimConfig = DEFAULT_PIM,
 
     a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))
     a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K)
-    w_planes = to_nibbles(w_q.values, w_q.bits)            # (Pw, K, N)
 
     if cfg.analog:
+        w_planes = plan.planes[:, :plan.k, :plan.n]
         sigma = cfg.read_noise_sigma
         if sigma == 0.0:
             sigma = DEFAULT_CELL.level_noise_sigma()
@@ -188,28 +326,81 @@ def pim_matmul(x: jax.Array, w_q: QTensor, cfg: PimConfig = DEFAULT_PIM,
         sh = (16.0 ** jnp.arange(pa))[:, None] * (16.0 ** jnp.arange(pw))[None]
         acc = jnp.tensordot(sh.astype(jnp.float32), partials,
                             axes=[[0, 1], [0, 1]])
+        out = acc.astype(jnp.float32) * a_q.scale * plan.scale
+        if bias is not None:
+            out = out + bias.astype(jnp.float32).reshape(1, -1)
     elif cfg.use_pallas:
         from repro.kernels.pim_matmul import ops as pim_ops
-        acc = pim_ops.pim_matmul_int(a_planes, w_planes,
-                                     interpret=cfg.interpret)
+        pad_k = plan.planes.shape[1] - plan.k
+        if pad_k:
+            a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_k)))
+        bias_p = None
+        if bias is not None:
+            pad_n = plan.planes.shape[2] - plan.n
+            bias_p = jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
+                             ((0, 0), (0, pad_n)))
+        out = pim_ops.pim_matmul_fused(a_planes, plan.planes, a_q.scale,
+                                       plan.padded_scale, bias=bias_p,
+                                       interpret=cfg.interpret)[:, :plan.n]
     else:
+        w_planes = plan.planes[:, :plan.k, :plan.n]
         acc = _shift_add(_plane_matmuls(a_planes, w_planes))
+        out = acc.astype(jnp.float32) * a_q.scale * plan.scale
+        if bias is not None:
+            out = out + bias.astype(jnp.float32).reshape(1, -1)
 
-    out = acc.astype(jnp.float32) * a_q.scale * w_q.scale
-    return out.reshape(orig_shape[:-1] + (w_q.values.shape[-1],))
+    return out.reshape(orig_shape[:-1] + (plan.n,))
+
+
+def pim_depthwise_matmul(x: jax.Array,
+                         w_q: Union[PlannedDepthwiseWeights, jax.Array],
+                         cfg: Optional[PimConfig] = None) -> jax.Array:
+    """Grouped (depthwise) convolution through the bit-sliced engine.
+
+    Each channel's patch vector is one driven vector against that channel's
+    stationary filter column: integer plane products + shift-and-add per
+    channel, dequantized with per-(row, channel) act scales × per-channel
+    weight scales. Always exact-mode (the analog readout study covers the
+    GEMM layers; depthwise K = kh*kw is below one WDM chunk anyway).
+
+    Args:
+      x: float patches, shape (..., K, C) — K = kh*kw taps, C channels.
+      w_q: planned depthwise weights (K, C), or a raw float (K, C) matrix
+        (planned on the fly).
+      cfg: PIM operating point; defaults to the plan's config.
+
+    Returns:
+      float32 (..., C).
+    """
+    if not isinstance(w_q, PlannedDepthwiseWeights):
+        w_q = prepare_depthwise_weights(w_q, cfg or DEFAULT_PIM)
+    if cfg is None:
+        cfg = w_q.cfg
+    _check_widths(cfg)
+    orig_shape = x.shape
+    k, c = orig_shape[-2], orig_shape[-1]
+    x3 = x.reshape(-1, k, c)
+    a_q = quantize(x3, bits=cfg.act_bits, axis=(1,))       # scale (M, 1, C)
+    a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K, C)
+    partials = jnp.einsum("amkc,wkc->awmc",
+                          a_planes.astype(jnp.int32),
+                          w_q.planes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+    acc = _shift_add(partials)                             # (M, C) int32
+    out = acc.astype(jnp.float32) * a_q.scale[:, 0, :] * w_q.scale
+    return out.reshape(orig_shape[:-2] + (c,))
 
 
 def pim_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                cfg: PimConfig = DEFAULT_PIM,
                rng: Optional[jax.Array] = None) -> jax.Array:
-    """Float-weight convenience wrapper: quantize-on-the-fly + PIM matmul."""
-    y = pim_matmul(x, prepare_weights(w, cfg), cfg, rng)
-    if b is not None:
-        y = y + b
-    return y
+    """Float-weight convenience wrapper: plan on-the-fly + PIM matmul with
+    the bias fused into the kernel epilogue."""
+    return pim_matmul(x, prepare_weights(w, cfg), cfg, rng, bias=b)
 
 
-def reference_quantized_matmul(x: jax.Array, w_q: QTensor,
+def reference_quantized_matmul(x: jax.Array,
+                               w_q: Union[PlannedWeights, QTensor],
                                cfg: PimConfig = DEFAULT_PIM) -> jax.Array:
     """Oracle: plain int32 matmul of the quantized codes (no nibble
     decomposition). Exact-mode PIM must match this bit-for-bit."""

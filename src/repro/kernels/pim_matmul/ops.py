@@ -1,18 +1,22 @@
 """jit'd public wrappers for the PIM matmul kernel.
 
-``pim_matmul_int`` is the integer-plane entry point used by the PIM engine;
+``pim_matmul_fused`` is the planned-weight entry point used by the PIM
+engine's default exact path (int32 accumulation + in-kernel dequant
+epilogue); ``pim_matmul_int`` is the raw integer-plane entry point;
 ``pim_matmul_quantized`` is the end-to-end float API (quantize -> planes ->
-kernel -> dequantize) used by serving layers.
+fused kernel -> float) used by serving layers that hold raw codes.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pim_matmul.pim_matmul import pim_matmul_pallas
-from repro.kernels.pim_matmul.ref import pim_matmul_ref
+from repro.kernels.pim_matmul.pim_matmul import (pim_matmul_fused_pallas,
+                                                 pim_matmul_pallas)
+from repro.kernels.pim_matmul.ref import pim_matmul_fused_ref, pim_matmul_ref
 from repro.quant.nibbles import to_nibbles
 from repro.quant.quantize import QTensor, quantize
 
@@ -26,18 +30,39 @@ def pim_matmul_int(a_planes: jax.Array, w_planes: jax.Array,
     return pim_matmul_pallas(a_planes, w_planes, interpret=interpret)
 
 
+def pim_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
+                     a_scale: jax.Array, w_scale: jax.Array,
+                     bias: Optional[jax.Array] = None,
+                     interpret: bool = True, use_ref: bool = False
+                     ) -> jax.Array:
+    """Nibble planes + scales -> (M, N) float32 via the fused epilogue.
+
+    a_scale: (M, 1) per-row act scales; w_scale: (1, N) per-col weight
+    scales; bias: optional (1, N). Bit-identical to pim_matmul_fused_ref.
+    """
+    if use_ref:
+        return pim_matmul_fused_ref(a_planes, w_planes, a_scale, w_scale,
+                                    bias)
+    return pim_matmul_fused_pallas(a_planes, w_planes, a_scale, w_scale,
+                                   bias, interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("weight_bits", "act_bits", "interpret"))
 def pim_matmul_quantized(x: jax.Array, w_q_values: jax.Array,
                          w_q_scale: jax.Array, weight_bits: int = 4,
                          act_bits: int = 4, interpret: bool = True
                          ) -> jax.Array:
-    """Float (..., K) x quantized (K, N) -> float (..., N) via the kernel."""
+    """Float (..., K) x quantized (K, N) -> float (..., N) via the fused
+    kernel. Callers that execute repeatedly should use the engine's
+    ``prepare_weights`` instead so the plane decomposition happens once."""
     orig = x.shape
+    n = w_q_values.shape[-1]
     x2 = x.reshape(-1, orig[-1])
     a_q = quantize(x2, bits=act_bits, axis=(1,))
     a_planes = to_nibbles(a_q.values, act_bits)
     w_planes = to_nibbles(w_q_values, weight_bits)
-    acc = pim_matmul_int(a_planes, w_planes, interpret=interpret)
-    out = acc.astype(jnp.float32) * a_q.scale * w_q_scale
-    return out.reshape(orig[:-1] + (w_q_values.shape[-1],))
+    w_scale = jnp.broadcast_to(w_q_scale.astype(jnp.float32), (1, n))
+    out = pim_matmul_fused_pallas(a_planes, w_planes, a_q.scale, w_scale,
+                                  interpret=interpret)
+    return out.reshape(orig[:-1] + (n,))

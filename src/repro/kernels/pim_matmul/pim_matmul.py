@@ -6,11 +6,29 @@ This is the paper's PIM datapath adapted to the TPU memory hierarchy
 (the "WDM accumulation"), and the shift-and-add recombination (the
 "aggregation unit") happens in the int32 VMEM accumulator.
 
+Two entry points:
+  * ``pim_matmul_pallas``        — raw int32 accumulator output.
+  * ``pim_matmul_fused_pallas``  — adds the aggregation unit's *fused
+    dequantization epilogue*: on the last K step the int32 accumulator
+    tile is rescaled in VMEM by the per-row activation scale and the
+    per-column weight scale (+ optional bias) and written out as float32,
+    so the accumulator never round-trips through a separate float pass.
+    The epilogue applies ``(acc * a_scale) * w_scale (+ bias)`` in float32
+    with the same broadcast order as the jnp reference. The dequantized
+    (no-bias) output is bit-identical to the eager jnp reference; the
+    optional bias add compiles to a fused multiply-add (XLA contracts the
+    trailing ``mul+add`` into an FMA — one rounding instead of two, i.e.
+    at least as accurate as the eager two-step reference, within 1 ulp).
+
 Tiling:
   grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis so each
   (m, n) output tile accumulates across K steps in a VMEM scratch
   accumulator, written out on the last K step. Plane pairs are unrolled
   inside the kernel body (Pa, Pw <= 2 in practice: 4b/8b operands).
+  ``kernel_tiles`` is the deterministic tile chooser shared with the
+  engine's :class:`~repro.core.pim.PlannedWeights` pre-padding: weight
+  planes padded at programming time always land on the same tile grid the
+  kernel would pick, so the per-call padding is a no-op.
 
 VMEM budget per step (bm=bn=128, bk=512, Pa=Pw=2):
   a tile 2*128*512 B + w tile 2*512*128 B + acc 128*128*4 B ~= 0.33 MiB,
@@ -22,11 +40,29 @@ dot dims are (128, 512) x (512, 128) — MXU-aligned (multiples of 128).
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def kernel_tiles(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                 bn: int = DEFAULT_BN, bk: int = DEFAULT_BK
+                 ) -> Tuple[int, int, int]:
+    """Deterministic (bm, bn, bk) tile selection for problem (M, K, N).
+
+    Shared between the kernel wrappers and ``prepare_weights`` so that
+    planes padded once at weight-programming time stay valid for every
+    subsequent call: for any K' that is a multiple of ``ceil(k/bk)*bk``
+    the recomputed tile divides it exactly.
+    """
+    return min(bm, m), min(bn, n), min(bk, k)
 
 
 def _pim_matmul_kernel(a_ref, w_ref, o_ref, acc_ref, *, n_k: int,
@@ -80,9 +116,7 @@ def pim_matmul_pallas(a_planes: jax.Array, w_planes: jax.Array,
     pw, k2, n = w_planes.shape
     assert k == k2, f"contraction mismatch {k} vs {k2}"
 
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, k)
+    bm, bn, bk = kernel_tiles(m, k, n, bm, bn, bk)
     # pad to tile multiples (zero padding is exact for integer matmul)
     pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
     if pad_m or pad_k:
@@ -105,4 +139,115 @@ def pim_matmul_pallas(a_planes: jax.Array, w_planes: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a_planes, w_planes)
+    return out[:m, :n]
+
+
+def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
+                             pa: int, pw: int, has_bias: bool):
+    """One (m, n, k) grid step with the fused dequant epilogue.
+
+    a_ref: (Pa, bm, bk) int8  — activation nibble planes tile
+    w_ref: (Pw, bk, bn) int8  — weight nibble planes tile
+    as_ref: (bm, 1) f32       — per-row activation scales
+    ws_ref: (1, bn) f32       — per-column weight scales
+    [b_ref: (1, bn) f32]      — optional bias (when has_bias)
+    o_ref: (bm, bn) f32       — dequantized output tile (last k step)
+    acc_ref: (bm, bn) int32   — VMEM accumulator scratch
+    """
+    if has_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = acc_ref[...]
+    for d in range(pa):
+        a_pl = a_ref[d].astype(jnp.int32)
+        for e in range(pw):
+            w_pl = w_ref[e].astype(jnp.int32)
+            partial = jax.lax.dot_general(
+                a_pl, w_pl, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc = acc + partial * (16 ** (d + e))
+    acc_ref[...] = acc
+
+    @pl.when(k_step == n_k - 1)
+    def _write_out():
+        # Same op order as the jnp path: (acc * a_scale) * w_scale (+ bias),
+        # elementwise in f32 — bit-identical dequantization.
+        out = acc_ref[...].astype(jnp.float32) * as_ref[...] * ws_ref[...]
+        if has_bias:
+            out = out + b_ref[...]
+        o_ref[...] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
+                            a_scale: jax.Array, w_scale: jax.Array,
+                            bias: Optional[jax.Array] = None,
+                            bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                            bk: int = DEFAULT_BK,
+                            interpret: bool = False) -> jax.Array:
+    """Bit-sliced integer matmul with the fused dequantization epilogue.
+
+    Args:
+      a_planes: (Pa, M, K) int8 nibble planes of the activations.
+      w_planes: (Pw, K, N) int8 nibble planes of the weights.
+      a_scale: (M, 1) f32 per-row dynamic activation scales.
+      w_scale: (1, N) f32 per-column weight scales.
+      bias: optional (1, N) f32, added after dequantization.
+      bm/bn/bk: VMEM tile sizes (MXU-aligned).
+      interpret: run in interpreter mode (CPU validation).
+
+    Returns:
+      (M, N) float32 — bit-exact vs. ref.pim_matmul_fused_ref.
+    """
+    pa, m, k = a_planes.shape
+    pw, k2, n = w_planes.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert a_scale.shape == (m, 1), f"a_scale shape {a_scale.shape}"
+    assert w_scale.shape == (1, n), f"w_scale shape {w_scale.shape}"
+
+    bm, bn, bk = kernel_tiles(m, k, n, bm, bn, bk)
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    if pad_m or pad_k:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_planes = jnp.pad(w_planes, ((0, 0), (0, pad_k), (0, pad_n)))
+    if pad_m:
+        a_scale = jnp.pad(a_scale, ((0, pad_m), (0, 0)))
+    if pad_n:
+        w_scale = jnp.pad(w_scale, ((0, 0), (0, pad_n)))
+        if bias is not None:
+            bias = jnp.pad(bias, ((0, 0), (0, pad_n)))
+    mp, kp, np_ = m + pad_m, k + pad_k, n + pad_n
+    n_k = kp // bk
+    has_bias = bias is not None
+
+    in_specs = [
+        pl.BlockSpec((pa, bm, bk), lambda i, j, s: (0, i, s)),
+        pl.BlockSpec((pw, bk, bn), lambda i, j, s: (0, s, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
+        pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+    ]
+    inputs = [a_planes, w_planes, a_scale, w_scale]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        inputs.append(bias)
+
+    out = pl.pallas_call(
+        functools.partial(_pim_matmul_fused_kernel, n_k=n_k, pa=pa, pw=pw,
+                          has_bias=has_bias),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(*inputs)
     return out[:m, :n]

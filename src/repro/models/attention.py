@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models.layers import Params, apply_rope, dense_init, rms_norm
+from repro.models.layers import (Params, apply_rope, dense_init, proj,
+                                 rms_norm)
 
 NEG_INF = -1e30
 
@@ -50,9 +51,9 @@ def _project_qkv(p: Params, x: jax.Array, num_heads: int, num_kv_heads: int,
                  head_dim: int, positions: jax.Array, rope_theta: float,
                  norm_eps: float = 1e-6, use_rope: bool = True):
     b, s, _ = x.shape
-    q = x @ p["wq_dh"]
-    k = x @ p["wk_dh"]
-    v = x @ p["wv_dh"]
+    q = proj(x, p["wq_dh"])
+    k = proj(x, p["wk_dh"])
+    v = proj(x, p["wv_dh"])
     if "bq_bh" in p:
         q, k, v = q + p["bq_bh"], k + p["bk_bh"], v + p["bv_bh"]
     q = q.reshape(b, s, num_heads, head_dim)
@@ -201,7 +202,7 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     valid &= jnp.where(w > 0, index - k_pos < w, True)
     out = _sdpa(q, k, v, jnp.broadcast_to(valid[:, None, :], (b, 1, s_max)))
     out = out.reshape(b, 1, num_heads * head_dim)
-    return out @ p["wo_hd"], {"k": k, "v": v}
+    return proj(out, p["wo_hd"]), {"k": k, "v": v}
 
 
 def attention_block(p: Params, x: jax.Array, positions: jax.Array,
@@ -227,7 +228,7 @@ def attention_block(p: Params, x: jax.Array, positions: jax.Array,
         out = full_attention(q, k, v, positions, window, causal, prefix_len)
     b = x.shape[0]
     out = out.reshape(b, s, num_heads * head_dim)
-    out = out @ p["wo_hd"]
+    out = proj(out, p["wo_hd"])
     if return_kv:
         return out, (k, v)
     return out
@@ -239,12 +240,12 @@ def cross_attention_block(p: Params, x: jax.Array, enc_out: jax.Array,
     """Encoder-decoder cross attention (whisper). No RoPE, no mask."""
     b, s, _ = x.shape
     t = enc_out.shape[1]
-    q = (x @ p["wq_dh"]).reshape(b, s, num_heads, head_dim)
-    k = (enc_out @ p["wk_dh"]).reshape(b, t, num_kv_heads, head_dim)
-    v = (enc_out @ p["wv_dh"]).reshape(b, t, num_kv_heads, head_dim)
+    q = proj(x, p["wq_dh"]).reshape(b, s, num_heads, head_dim)
+    k = proj(enc_out, p["wk_dh"]).reshape(b, t, num_kv_heads, head_dim)
+    v = proj(enc_out, p["wv_dh"]).reshape(b, t, num_kv_heads, head_dim)
     mask = jnp.ones((b, s, t), bool)
     out = _sdpa(q, k, v, mask).reshape(b, s, num_heads * head_dim)
-    out = out @ p["wo_hd"]
+    out = proj(out, p["wo_hd"])
     if return_kv:
         return out, (k, v)
     return out
@@ -256,7 +257,7 @@ def cross_attention_decode(p: Params, x: jax.Array, xk: jax.Array,
     """Decode-time cross attention against precomputed encoder K/V."""
     b, s, _ = x.shape
     t = xk.shape[1]
-    q = (x @ p["wq_dh"]).reshape(b, s, num_heads, head_dim)
+    q = proj(x, p["wq_dh"]).reshape(b, s, num_heads, head_dim)
     mask = jnp.ones((b, s, t), bool)
     out = _sdpa(q, xk, xv, mask).reshape(b, s, num_heads * head_dim)
-    return out @ p["wo_hd"]
+    return proj(out, p["wo_hd"])

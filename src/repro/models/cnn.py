@@ -21,7 +21,8 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.pim import PimConfig, pim_matmul, prepare_weights
+from repro.core.pim import (PimConfig, pim_depthwise_matmul, pim_matmul,
+                            prepare_depthwise_weights, prepare_weights)
 from repro.core.workloads import ConvSpec, DenseSpec, LayerSpec
 from repro.quant.quantize import fake_quantize
 
@@ -65,20 +66,43 @@ def _maxpool(x: jax.Array, factor: int) -> jax.Array:
 
 
 class _Executor:
+    """Structure-aware layer executor.
+
+    With ``pim`` set, every layer's weights are *planned once* per executor
+    (quantize + nibble-decompose + pad at programming time, keyed on the
+    deterministic layer name) and every matmul drives activations past the
+    stationary planes — the paper's weight-stationary OPCM mapping. The
+    layer bias is fused into the kernel's dequant epilogue.
+    """
+
     def __init__(self, params: Params, quant_bits: int = 0,
-                 pim: Optional[PimConfig] = None, rng=None):
+                 pim: Optional[PimConfig] = None, rng=None,
+                 plans: Optional[Dict[str, Any]] = None):
         self.params = params
         self.quant_bits = quant_bits
         self.pim = pim
         self.rng = rng
+        # layer name -> planned weights; pass plan_cnn_weights(...) output
+        # to keep weights stationary across forwards
+        self._plans: Dict[str, Any] = {} if plans is None else plans
 
-    def matmul(self, x: jax.Array, w: jax.Array, per_col_axis) -> jax.Array:
+    def _plan(self, name: str, w: jax.Array, depthwise: bool = False):
+        plan = self._plans.get(name)
+        if plan is None:
+            plan = (prepare_depthwise_weights(w, self.pim) if depthwise
+                    else prepare_weights(w, self.pim))
+            self._plans[name] = plan
+        return plan
+
+    def matmul(self, x: jax.Array, w: jax.Array, per_col_axis, name: str,
+               bias: Optional[jax.Array] = None) -> jax.Array:
         if self.quant_bits:
             w = fake_quantize(w, self.quant_bits, axis=per_col_axis)
         if self.pim is not None:
-            return pim_matmul(x, prepare_weights(w, self.pim), self.pim,
-                              self.rng)
-        return x @ w
+            return pim_matmul(x, self._plan(name, w), self.pim, self.rng,
+                              bias=bias)
+        y = x @ w
+        return y if bias is None else y + bias
 
     def conv(self, spec: ConvSpec, x: jax.Array, relu: bool = True
              ) -> jax.Array:
@@ -87,19 +111,22 @@ class _Executor:
         p = self.params[spec.name]
         if spec.groups == 1:
             cols = _im2col(x, spec)
-            y = self.matmul(cols, p["w"].reshape(-1, spec.out_c), (0,))
+            y = self.matmul(cols, p["w"].reshape(-1, spec.out_c), (0,),
+                            spec.name, bias=p["b"])
         else:                                      # depthwise
             cols = _im2col(x, spec)
             b, oh, ow, _ = cols.shape
             cols = cols.reshape(b, oh, ow, spec.kh * spec.kw, spec.in_c)
-            w = p["w"]
+            w = p["w"].reshape(spec.kh * spec.kw, spec.in_c)
             if self.quant_bits:
-                w = fake_quantize(w, self.quant_bits, axis=(0, 1, 2))
-            y = jnp.einsum("bhwkc,kzc->bhwc",
-                           cols, w.reshape(spec.kh * spec.kw, 1, spec.in_c))
+                w = fake_quantize(w, self.quant_bits, axis=(0,))
             if self.pim is not None:
-                y = fake_quantize(y, self.pim.act_bits)
-        y = y + p["b"]
+                # per-channel planned weights through the bit-sliced engine
+                y = pim_depthwise_matmul(
+                    cols, self._plan(spec.name, w, depthwise=True), self.pim)
+            else:
+                y = jnp.einsum("bhwkc,kc->bhwc", cols, w)
+            y = y + p["b"]
         return jax.nn.relu(y) if relu else y
 
     def dense(self, spec: DenseSpec, x: jax.Array, relu: bool) -> jax.Array:
@@ -108,16 +135,43 @@ class _Executor:
                 x = x.reshape(x.shape[0], -1)
             else:
                 x = jnp.mean(x, axis=(1, 2))
-        y = self.matmul(x, self.params[spec.name]["w"], (0,))
-        y = y + self.params[spec.name]["b"]
+        y = self.matmul(x, self.params[spec.name]["w"], (0,), spec.name,
+                        bias=self.params[spec.name]["b"])
         return jax.nn.relu(y) if relu else y
+
+
+def plan_cnn_weights(params: Params, layers: Sequence[LayerSpec],
+                     pim: PimConfig) -> Dict[str, Any]:
+    """Program every layer's weights into planned 'OPCM' form once.
+
+    Pass the result as ``cnn_forward(..., plans=...)`` so repeated
+    (eager) forwards drive activations past stationary planes instead of
+    re-running quantize + nibble-decompose + pad per call. Only valid
+    while ``quant_bits == 0`` (plans capture the raw float weights).
+    """
+    plans: Dict[str, Any] = {}
+    for spec in layers:
+        p = params[spec.name]
+        if isinstance(spec, ConvSpec) and spec.groups != 1:
+            w = p["w"].reshape(spec.kh * spec.kw, spec.in_c)
+            plans[spec.name] = prepare_depthwise_weights(w, pim)
+        elif isinstance(spec, ConvSpec):
+            plans[spec.name] = prepare_weights(
+                p["w"].reshape(-1, spec.out_c), pim)
+        else:
+            plans[spec.name] = prepare_weights(p["w"], pim)
+    return plans
 
 
 def cnn_forward(params: Params, layers: Sequence[LayerSpec], x: jax.Array,
                 quant_bits: int = 0, pim: Optional[PimConfig] = None,
-                rng=None) -> jax.Array:
+                rng=None, plans: Optional[Dict[str, Any]] = None
+                ) -> jax.Array:
     """x: (B, H, W, 3) -> logits (B, classes)."""
-    ex = _Executor(params, quant_bits, pim, rng)
+    assert plans is None or not quant_bits, \
+        "precomputed plans capture raw float weights; they cannot honor " \
+        "quant_bits — pass one or the other"
+    ex = _Executor(params, quant_bits, pim, rng, plans)
     specs = list(layers)
     i = 0
     while i < len(specs):

@@ -15,7 +15,22 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.pim import PlannedWeights, pim_matmul
+
 Params = Dict[str, jax.Array]
+
+
+def proj(x: jax.Array, w) -> jax.Array:
+    """Projection matmul with weight-stationary PIM dispatch.
+
+    When ``w`` is a :class:`~repro.core.pim.PlannedWeights` (the serving
+    stack programs projection weights into 'OPCM' once via
+    ``plan_params_for_pim``), the matmul runs through the bit-sliced PIM
+    engine's fused Pallas path; otherwise it is a plain float matmul.
+    """
+    if isinstance(w, PlannedWeights):
+        return pim_matmul(x, w).astype(x.dtype)
+    return x @ w
 
 
 def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
@@ -65,14 +80,14 @@ def mlp_init(key, d_model: int, d_ff: int, gated: bool = True,
 def mlp_apply(p: Params, x: jax.Array, activation: str = "silu"
               ) -> jax.Array:
     from repro.distributed.sharding import constrain
-    h = x @ p["wi_dh"]
+    h = proj(x, p["wi_dh"])
     act = jax.nn.silu if activation == "silu" else jax.nn.gelu
     if "wg_dh" in p:
-        h = act(x @ p["wg_dh"]) * h
+        h = act(proj(x, p["wg_dh"])) * h
     else:
         h = act(h)
     h = constrain(h, "act_btf")
-    return h @ p["wo_hd"]
+    return proj(h, p["wo_hd"])
 
 
 def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32

@@ -1,0 +1,6 @@
+"""Make the tests directory importable (hypo_compat shim) regardless of
+how pytest resolves rootdir."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -3,7 +3,7 @@ and the analog readout model's error structure."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.core.pim import (PimConfig, pim_matmul, prepare_weights,
                             reference_quantized_matmul)

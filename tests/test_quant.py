@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.quant import (NIBBLE_BASE, fake_quantize, from_nibbles, num_nibbles,
                          pack_nibble_pair, qmax, quantize, to_nibbles,

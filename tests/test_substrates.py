@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.checkpoint.ckpt import (cleanup_old, latest_step,
                                    restore_checkpoint, save_checkpoint)
