@@ -117,16 +117,18 @@ def kernel_bench() -> List[Row]:
     """Kernel micro-bench (CPU wall clock — relative only): bit-sliced PIM
     matmul (planned weights; default fused-Pallas and jnp fallback paths)
     vs dense float matmul, SSD chunked vs sequential."""
-    from repro.core.pim import PimConfig, pim_matmul, prepare_weights
+    from repro import engine
     from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_scan_ref
     rows: List[Row] = []
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
     w = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
-    cfg = PimConfig(weight_bits=4, act_bits=4)
-    cfg_jnp = PimConfig(weight_bits=4, act_bits=4, use_pallas=False)
-    wq = prepare_weights(w, cfg)
-    f_pim = jax.jit(lambda a: pim_matmul(a, wq, cfg))
-    f_jnp = jax.jit(lambda a: pim_matmul(a, wq, cfg_jnp))
+    cfg = engine.PimConfig(weight_bits=4, act_bits=4,
+                           substrate="exact-pallas")
+    cfg_jnp = engine.PimConfig(weight_bits=4, act_bits=4,
+                               substrate="exact-jnp")
+    wq = engine.program(w, cfg)
+    f_pim = jax.jit(lambda a: engine.matmul(a, wq))
+    f_jnp = jax.jit(lambda a: engine.matmul(a, wq, cfg=cfg_jnp))
     f_ref = jax.jit(lambda a: a @ w)
     for name, fn in (("pim_w4a4", f_pim), ("pim_w4a4_jnp", f_jnp),
                      ("dense_f32", f_ref)):

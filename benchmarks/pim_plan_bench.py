@@ -7,7 +7,7 @@ two regimes:
   * ``replan_per_call`` — the pre-refactor behaviour: quantize + nibble-
     decompose + pad the weights inside every call (weights "move" every
     step, the internal-data-movement overhead PIM exists to eliminate).
-  * ``planned``         — program the weights once with ``prepare_weights``
+  * ``planned``         — program the weights once with ``engine.program``
     and drive activations past the stationary planes each step.
 
 Both run the identical exact datapath, so the delta is pure weight-plane
@@ -39,16 +39,17 @@ def _time(fn, *args) -> float:
 
 
 def plan_execute_bench() -> List[Row]:
-    from repro.core.pim import PimConfig, pim_matmul, prepare_weights
+    from repro import engine
     rows: List[Row] = []
     x = jax.random.normal(jax.random.PRNGKey(0), (DECODE_M, DECODE_K))
     w = jax.random.normal(jax.random.PRNGKey(1), (DECODE_K, DECODE_N))
     for bits in (4, 8):
-        cfg = PimConfig(weight_bits=bits, act_bits=bits)
-        plan = prepare_weights(w, cfg)
-        f_planned = jax.jit(lambda a, p=plan, c=cfg: pim_matmul(a, p, c))
+        cfg = engine.PimConfig(weight_bits=bits, act_bits=bits,
+                               substrate="exact-pallas")
+        plan = engine.program(w, cfg)
+        f_planned = jax.jit(lambda a, p=plan: engine.matmul(a, p))
         f_replan = jax.jit(
-            lambda a, ww, c=cfg: pim_matmul(a, prepare_weights(ww, c), c))
+            lambda a, ww, c=cfg: engine.matmul(a, engine.program(ww, c)))
         t_planned = _time(f_planned, x)
         t_replan = _time(f_replan, x, w)
         rows += [

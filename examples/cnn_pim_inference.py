@@ -33,10 +33,12 @@ params = _train(layers, params, xtr, ytr, steps=60)
 
 acc_fp = _acc(params, layers, xte, yte)
 acc_pim = _acc(params, layers, xte, yte,
-               pim=PimConfig(weight_bits=4, act_bits=4))
+               pim=PimConfig(weight_bits=4, act_bits=4,
+                             substrate="exact-pallas"))
 acc_analog = _acc(params, layers, xte, yte,
-                  pim=PimConfig(weight_bits=4, act_bits=4, analog=True,
-                                adc_bits=5), rng=jax.random.PRNGKey(9))
+                  pim=PimConfig(weight_bits=4, act_bits=4,
+                                substrate="analog", adc_bits=5),
+                  rng=jax.random.PRNGKey(9))
 print(f"accuracy: fp32 {acc_fp:.3f} | PIM int4 (exact) {acc_pim:.3f} | "
       f"PIM analog 5b-ADC {acc_analog:.3f}")
 

@@ -5,10 +5,9 @@
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.core.cell import CellDesign, best_design
 from repro.core.perfmodel import best_grouping, network_perf, total_power_w
-from repro.core.pim import PimConfig, pim_matmul, prepare_weights, \
-    reference_quantized_matmul
 from repro.core.workloads import resnet18
 
 print("== 1. OPCM cell (paper Fig. 2) ==")
@@ -19,16 +18,23 @@ w = jnp.arange(0.30, 0.71, 0.02)
 t = jnp.arange(10.0, 40.1, 2.5)
 print(f"   swept optimum: {best_design(w, t)}")
 
-print("== 2. Bit-sliced PIM matmul (the paper's MAC datapath) ==")
+print("== 2. The engine: program once, execute many ==")
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
 wmat = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
-cfg = PimConfig(weight_bits=4, act_bits=4)           # one OPCM cell/weight
-wq = prepare_weights(wmat, cfg)                      # 'program' the cells
-y = pim_matmul(x, wq, cfg)                           # nibble MACs+shift-add
-ref = reference_quantized_matmul(x, wq, cfg)
+print(f"   substrates: {', '.join(engine.available_substrates())}")
+cfg = engine.PimConfig(weight_bits=4, act_bits=4,    # one OPCM cell/weight
+                       substrate="exact-pallas")
+plan = engine.program(wmat, cfg)                     # 'program' the cells
+y = engine.matmul(x, plan)                           # nibble MACs+shift-add
+ref = engine.reference_quantized_matmul(x, plan, cfg)
 print(f"   bit-exact vs int oracle: {bool(jnp.array_equal(y, ref))}")
-y_analog = pim_matmul(x, wq, PimConfig(analog=True, adc_bits=5),
-                      rng=jax.random.PRNGKey(2))
+y_jnp = engine.matmul(x, plan,
+                      cfg=engine.PimConfig(substrate="exact-jnp"))
+print(f"   exact-jnp twin bit-identical: "
+      f"{bool(jnp.array_equal(y, y_jnp))}")
+plan_a = engine.program(wmat, engine.PimConfig(substrate="analog",
+                                               adc_bits=5))
+y_analog = engine.matmul(x, plan_a, rng=jax.random.PRNGKey(2))
 rel = float(jnp.linalg.norm(y_analog - ref) / jnp.linalg.norm(ref))
 print(f"   analog readout (5-bit ADC + scattering noise): rel err {rel:.3f}")
 

@@ -6,16 +6,22 @@ transformer serving). Batched prefill + greedy decode + OPIMA estimate.
 """
 import argparse
 
+from repro.engine import available_substrates
 from repro.launch.serve import serve
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen2.5-3b")
 ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--substrate", default="exact-pallas",
+                choices=available_substrates(),
+                help="engine substrate for the programmed plans")
 args = ap.parse_args()
 
 res = serve(args.arch, batch=args.batch, prompt_len=32, gen=16,
-            layers=4, d_model=128, pim=True, pim_bits=4)
-print(f"arch={args.arch} (reduced 4L/128d), batch={args.batch}")
+            layers=4, d_model=128, pim=True, pim_bits=4,
+            pim_substrate=args.substrate)
+print(f"arch={args.arch} (reduced 4L/128d), batch={args.batch}, "
+      f"substrate={res['pim_substrate']}")
 print(f"wall-clock: prefill {res['prefill_s']*1e3:.1f} ms, "
       f"decode {res['decode_s_per_token']*1e3:.1f} ms/token (CPU)")
 print(f"generated tokens:\n{res['generated']}")

@@ -77,10 +77,11 @@ def run_table2() -> List[Row]:
         # PIM passes are interpreter-heavy: evaluate on a subset
         xs, ys = xte[:48], yte[:48]
         a_pim = _acc(params, layers, xs, ys,
-                     pim=PimConfig(weight_bits=4, act_bits=4))
+                     pim=PimConfig(weight_bits=4, act_bits=4,
+                                   substrate="exact-pallas"))
         a_pim_analog = _acc(params, layers, xs, ys,
                             pim=PimConfig(weight_bits=4, act_bits=4,
-                                          analog=True, adc_bits=5),
+                                          substrate="analog", adc_bits=5),
                             rng=jax.random.PRNGKey(9))
         rows += [
             (f"table2.{name}.acc_fp32", a_fp, ""),
@@ -113,12 +114,14 @@ def run_adc_ablation() -> List[Row]:
     params = init_cnn(layers, jax.random.PRNGKey(0))
     params = _train(layers, params, xtr, ytr)
     a_exact = _acc(params, layers, xte, yte,
-                   pim=PimConfig(weight_bits=4, act_bits=4))
+                   pim=PimConfig(weight_bits=4, act_bits=4,
+                                 substrate="exact-pallas"))
     rows: List[Row] = [(f"adc_ablation.{name}.exact", a_exact, "")]
     for adc in (3, 4, 5, 6, 8):
         a = _acc(params, layers, xte, yte,
-                 pim=PimConfig(weight_bits=4, act_bits=4, analog=True,
-                               adc_bits=adc), rng=jax.random.PRNGKey(9))
+                 pim=PimConfig(weight_bits=4, act_bits=4,
+                               substrate="analog", adc_bits=adc),
+                 rng=jax.random.PRNGKey(9))
         rows.append((f"adc_ablation.{name}.adc{adc}b", a,
                      f"vs exact {a - a_exact:+.3f}"))
     return rows

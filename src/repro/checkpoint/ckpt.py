@@ -24,6 +24,7 @@ are what this container can exercise.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -41,6 +42,34 @@ def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree.flatten(tree)
     paths = [f"leaf_{i:05d}" for i in range(len(flat))]
     return flat, paths, treedef
+
+
+def _key_str(key) -> str:
+    # render DictKey/SequenceKey/GetAttrKey/FlattenedIndexKey ourselves:
+    # the fingerprint must not depend on jax's repr formatting, which is
+    # not a cross-version contract. The key *type* is part of the
+    # rendering (dict key "0" != sequence index 0) and repr() escapes
+    # separator characters inside string keys.
+    tu = jax.tree_util
+    if isinstance(key, tu.DictKey):
+        return f"d:{key.key!r}"
+    if isinstance(key, tu.SequenceKey):
+        return f"s:{key.idx!r}"
+    if isinstance(key, tu.GetAttrKey):
+        return f"a:{key.name!r}"
+    if isinstance(key, tu.FlattenedIndexKey):
+        return f"i:{key.key!r}"
+    return f"x:{key!r}"
+
+
+def tree_fingerprint(tree: PyTree) -> str:
+    """Stable fingerprint of a pytree's structure: the ordered key paths
+    of all leaves (dict keys, sequence indices, registered-node child
+    slots), rendered from data we control so it survives JAX upgrades."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    rendered = "\n".join("/".join(_key_str(k) for k in path)
+                         for path, _ in paths)
+    return hashlib.sha256(rendered.encode()).hexdigest()[:16]
 
 
 def save_checkpoint(directory: str, step: int, tree: PyTree,
@@ -62,8 +91,10 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
-        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto(
-        ).hex() if False else None,  # structure travels via pickle-free repr
+        # structure fingerprint, validated on restore: catches a template
+        # whose leaf count/shapes happen to line up but whose container
+        # structure (dict keys, sequence layout) differs
+        "treedef": tree_fingerprint(tree),
         "num_leaves": len(flat),
         "dtypes": [str(np.asarray(x).dtype) for x in flat],
         "shapes": [list(np.asarray(x).shape) for x in flat],
@@ -112,6 +143,13 @@ def restore_checkpoint(directory: str, template: PyTree,
     assert len(flat_t) == manifest["num_leaves"], \
         f"leaf count mismatch: ckpt {manifest['num_leaves']} vs " \
         f"template {len(flat_t)}"
+    saved_fp = manifest.get("treedef")
+    if saved_fp is not None and saved_fp != tree_fingerprint(template):
+        raise ValueError(
+            f"checkpoint tree structure mismatch at {path}: saved "
+            f"fingerprint {saved_fp} != template "
+            f"{tree_fingerprint(template)} — the template's container "
+            "structure (keys/layout) differs from what was saved")
     leaves = []
     flat_sh = treedef.flatten_up_to(shardings) if shardings is not None \
         else [None] * len(flat_t)

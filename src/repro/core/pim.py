@@ -1,13 +1,23 @@
-"""The OPIMA PIM execution engine (paper §IV.C–D) — weight-stationary.
+"""The OPIMA PIM datapath math (paper §IV.C–D) — plans, programming, and
+the per-substrate arithmetic.
 
-This is the paper's datapath as a composable JAX op:
+This module is the *math* layer of the PIM engine: it defines the operating
+point (:class:`PimConfig`), the plan pytree hierarchy (weights programmed
+into 'OPCM'), the programming routines (quantize + nibble-decompose + pad,
+all once), and the exact / analog / emulation arithmetic that each
+execution substrate runs. The *dispatch* layer — the string-keyed substrate
+registry that models and serving code talk to — lives in
+:mod:`repro.engine`; model code never selects a route with booleans, it
+executes plans whose config names a substrate.
+
+The paper's datapath, as reproduced here:
 
   1. Weights are *programmed once* into 'OPCM': :func:`prepare_weights`
      quantizes (per-output-channel symmetric), nibble-decomposes into 4-bit
      planes — one OPCM cell per nibble (§IV.C.4 TDM) — and pre-pads the
      planes to the Pallas kernel's tile multiples. The result is a
-     :class:`PlannedWeights` pytree; plane decomposition and padding happen
-     at programming time, **not** per matmul call (the PIM property: weights
+     :class:`DensePlan` pytree; plane decomposition and padding happen at
+     programming time, **not** per matmul call (the PIM property: weights
      stay stationary in the array, only activations move).
   2. Activations are dynamically quantized per row — the MDL array re-tunes
      per driven vector (§IV.C.2) — and nibble-decomposed the same way.
@@ -15,53 +25,62 @@ This is the paper's datapath as a composable JAX op:
      multiply; partial products accumulate over the K (column/wavelength)
      dimension — WDM in-waveguide interference.
   4. The aggregation unit recombines planes with shift-and-add and rescales.
-     In the default exact mode this runs inside the Pallas kernel's fused
-     epilogue: per-row act-scale × per-column weight-scale dequantization
-     (+ optional bias) is applied to the int32 accumulator tile in VMEM, so
-     the accumulator never round-trips through a separate float pass. The
-     dequantized output is bit-for-bit equal to
-     :func:`reference_quantized_matmul`; a fused bias lands within 1 ulp of
-     the two-step reference (the kernel's mul+add contracts to an FMA —
-     one rounding instead of two).
+     On the ``exact-pallas`` substrate this runs inside the Pallas kernel's
+     fused epilogue: per-row act-scale × per-column weight-scale
+     dequantization (+ optional bias) is applied to the int32 accumulator
+     tile in VMEM, bit-for-bit equal to :func:`reference_quantized_matmul`.
 
-Two fidelity modes:
-  * ``exact``  — bit-exact integer arithmetic, routed through the Pallas
-    kernel by default (``use_pallas=True``, interpret mode on CPU); a
-    jnp-identical fallback is kept for ``use_pallas=False``.
-  * ``analog`` — models the physical readout: per-WDM-chunk photodetector
-    sums pass a transmission-noise + ADC-quantization stage before the
-    digital shift-and-add (accuracy-study mode; pure jnp).
+Plan hierarchy (all registered pytrees, each carrying its
+substrate-stamped :class:`PimConfig`):
 
-API:
-  prepare_weights(w, cfg)            -> PlannedWeights   (program once)
-  plan_from_qtensor(w_q, cfg)        -> PlannedWeights   (adopt existing codes)
-  pim_matmul(x, planned, cfg, bias=) -> float32          (execute many)
-  prepare_depthwise_weights(w, cfg)  -> PlannedDepthwiseWeights
-  pim_depthwise_matmul(x, planned)   -> float32          (grouped convs)
-  reference_quantized_matmul(x, w_q) -> oracle the exact mode must match
-    bit-for-bit.
+  DensePlan          (K, N) projection programmed as stationary planes
+  DepthwisePlan      (K, C) per-channel filters for grouped convolutions
+  ExpertStackedPlan  (E, K, N) vmapped plans over an expert axis (MoE)
 
-The same engine is used by the CNN reproduction workloads and as the
-serving-path matmul of the assigned LM architectures (weights stationary in
-"OPCM", activations driven — the paper's FC weight-stationary mapping).
+Programming API (the single place weight decomposition happens):
+
+  prepare_weights(w, cfg)            -> DensePlan
+  plan_from_qtensor(w_q, cfg)        -> DensePlan (adopt existing codes)
+  prepare_depthwise_weights(w, cfg)  -> DepthwisePlan
+  prepare_expert_weights(w, cfg)     -> ExpertStackedPlan
+  reference_quantized_matmul(x, w_q) -> oracle the exact substrates must
+    match bit-for-bit.
+
+Legacy entry points :func:`pim_matmul` / :func:`pim_depthwise_matmul` /
+:func:`pim_linear` are kept for compatibility; they dispatch through
+:func:`repro.engine.matmul`. New code should use :mod:`repro.engine`
+directly: ``engine.program(w, cfg)`` once, ``engine.matmul(x, plan)`` many.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.arch import DEFAULT_ARCH, OpimaArch
 from repro.core.cell import DEFAULT_CELL
 from repro.quant.nibbles import num_nibbles, to_nibbles
-from repro.quant.quantize import QTensor, qmax, quantize
+from repro.quant.quantize import QTensor, quantize
+
+# Canonical substrate names (registry keys — see repro/engine/substrates.py).
+EXACT_PALLAS = "exact-pallas"
+EXACT_JNP = "exact-jnp"
+ANALOG = "analog"
+EMULATE = "emulate"
 
 
 @dataclasses.dataclass(frozen=True)
 class PimConfig:
-    """Operating point of the PIM engine."""
+    """Operating point of the PIM engine.
+
+    Route selection is by substrate name: ``substrate`` is one of the
+    registry keys in :mod:`repro.engine.substrates` (``exact-pallas``,
+    ``exact-jnp``, ``analog``, ``emulate``). The historical boolean pair
+    (``analog`` + ``use_pallas``) is kept as a deprecated alias and is
+    resolved to a substrate name by :attr:`resolved_substrate`.
+    """
     weight_bits: int = 4          # paper baseline: 4b (one cell per weight)
     act_bits: int = 4
     cell_bits: int = 4            # OPCM MLC density
@@ -72,11 +91,13 @@ class PimConfig:
                                   # accumulates only across the subarrays of a
                                   # group sharing a wavelength (≈ kernel rows),
                                   # not across the full K dimension.
-    analog: bool = False          # enable the analog readout model
+    substrate: Optional[str] = None  # registry key; None -> resolve from the
+                                     # deprecated boolean pair below
+    analog: bool = False          # DEPRECATED: use substrate="analog"
     read_noise_sigma: float = 0.0  # relative transmission read noise; if 0
                                    # and analog, uses the cell-DSE implied one
-    use_pallas: bool = True       # exact mode routes through the Pallas
-                                  # kernel (fused dequant epilogue) by default
+    use_pallas: bool = True       # DEPRECATED: substrate="exact-pallas" /
+                                  # "exact-jnp"
     interpret: bool = True        # Pallas interpret mode (CPU container)
 
     @property
@@ -87,18 +108,71 @@ class PimConfig:
     def act_planes(self) -> int:
         return num_nibbles(self.act_bits)
 
+    @property
+    def resolved_substrate(self) -> str:
+        """The substrate registry key this config selects.
+
+        An explicit ``substrate`` wins; otherwise the deprecated boolean
+        pair is resolved (``analog`` before ``use_pallas``, matching the
+        historical dispatch order) with a :class:`DeprecationWarning`.
+        """
+        if self.substrate is not None:
+            return self.substrate
+        if self.analog:
+            warnings.warn(
+                "PimConfig(analog=True) is deprecated; use "
+                "PimConfig(substrate='analog')", DeprecationWarning,
+                stacklevel=3)
+            return ANALOG
+        if not self.use_pallas:
+            warnings.warn(
+                "PimConfig(use_pallas=False) is deprecated; use "
+                "PimConfig(substrate='exact-jnp')", DeprecationWarning,
+                stacklevel=3)
+            return EXACT_JNP
+        return EXACT_PALLAS
+
 
 DEFAULT_PIM = PimConfig()
+
+# Cell-DSE implied read-noise sigma, evaluated once at import: the cell
+# model uses host-side float() math, so it must not run inside a jit trace
+# (the analog substrate now serves under jit'd prefill/decode).
+_IMPLIED_READ_NOISE_SIGMA = float(DEFAULT_CELL.level_noise_sigma())
+_warned_noiseless_analog = False
+
+
+# ---------------------------------------------------------------------------
+# Plan hierarchy — weights programmed into 'OPCM'
+# ---------------------------------------------------------------------------
+class Plan:
+    """Marker base for programmed ('planned') weights.
+
+    Every concrete plan is a registered pytree carrying the
+    :class:`PimConfig` it was built for; ``plan.substrate`` names the
+    execution substrate, so ``engine.matmul(x, plan)`` needs no mode flags
+    at call sites.
+    """
+
+    cfg: PimConfig
+
+    @property
+    def substrate(self) -> str:
+        return self.cfg.resolved_substrate
+
+    def dequantized(self) -> jax.Array:
+        """Float weights implied by the programmed codes (emulation)."""
+        return self.values.astype(jnp.float32) * self.scale
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class PlannedWeights:
+class DensePlan(Plan):
     """A weight matrix programmed into 'OPCM': quantized codes plus the
     precomputed int8 nibble planes, pre-padded to the kernel's tile
     multiples. Built once by :func:`prepare_weights`; every subsequent
-    :func:`pim_matmul` drives activations past these stationary planes
-    without re-running the decomposition.
+    execution drives activations past these stationary planes without
+    re-running the decomposition.
 
     Registered as a pytree so plans flow through jit / scan / vmap — the
     serving stack stores one stacked plan per scanned layer.
@@ -132,7 +206,7 @@ class PlannedWeights:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class PlannedDepthwiseWeights:
+class DepthwisePlan(Plan):
     """Per-channel planned weights for grouped (depthwise) convolutions:
     each channel's (kh*kw,) filter is its own stationary column."""
 
@@ -152,12 +226,62 @@ class PlannedDepthwiseWeights:
                    cfg=aux[1])
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ExpertStackedPlan(Plan):
+    """Vmapped plans over a leading expert axis (MoE expert stacks).
+
+    ``dense`` holds a :class:`DensePlan` whose array leaves carry an extra
+    leading ``(E, ...)`` dimension — the result of vmapping the programming
+    routine over the expert axis. Execution vmaps the dense substrate math
+    the same way, so exact substrates stay bit-identical to a per-expert
+    reference. This closes the MoE ``_edf``/``_efd`` gap: expert weights
+    run on the real engine instead of the fake-quantize emulation.
+    """
+
+    dense: DensePlan             # leaves stacked over a leading expert axis
+    num_experts: int = 0
+
+    @property
+    def cfg(self) -> PimConfig:  # type: ignore[override]
+        return self.dense.cfg
+
+    @property
+    def bits(self) -> int:
+        return self.dense.bits
+
+    def dequantized(self) -> jax.Array:
+        return self.dense.dequantized()
+
+    @property
+    def shape(self):
+        return (self.num_experts, self.dense.k, self.dense.n)
+
+    def tree_flatten(self):
+        return ((self.dense,), (self.num_experts,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(dense=children[0], num_experts=aux[0])
+
+
+# Backward-compatible names (pre-engine API).
+PlannedWeights = DensePlan
+PlannedDepthwiseWeights = DepthwisePlan
+
+
+# ---------------------------------------------------------------------------
+# Programming — the single place weight decomposition happens
+# ---------------------------------------------------------------------------
 def plan_from_qtensor(w_q: QTensor, cfg: PimConfig = DEFAULT_PIM
-                      ) -> PlannedWeights:
+                      ) -> DensePlan:
     """Plan already-quantized (K, N) codes: decompose into nibble planes and
-    pre-pad to the kernel tile multiples. This is the single place weight
-    plane decomposition happens."""
+    pre-pad to the kernel tile multiples."""
     from repro.kernels.pim_matmul.pim_matmul import kernel_tiles
+    if cfg.weight_bits != w_q.bits:
+        # adopted codes define the weight width; the stamped cfg must agree
+        # with plan.bits or engine.matmul's consistency guard rejects it
+        cfg = dataclasses.replace(cfg, weight_bits=w_q.bits)
     k, n = w_q.values.shape
     planes = to_nibbles(w_q.values, w_q.bits)              # (Pw, K, N)
     _, bn, bk = kernel_tiles(1, k, n)
@@ -166,39 +290,50 @@ def plan_from_qtensor(w_q: QTensor, cfg: PimConfig = DEFAULT_PIM
         planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
     padded_scale = jnp.pad(jnp.broadcast_to(w_q.scale, (1, n)),
                            ((0, 0), (0, pad_n)))
-    return PlannedWeights(values=w_q.values, scale=w_q.scale, planes=planes,
-                          padded_scale=padded_scale, bits=w_q.bits, k=k, n=n,
-                          cfg=cfg)
+    return DensePlan(values=w_q.values, scale=w_q.scale, planes=planes,
+                     padded_scale=padded_scale, bits=w_q.bits, k=k, n=n,
+                     cfg=cfg)
 
 
-def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM
-                    ) -> PlannedWeights:
+def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM) -> DensePlan:
     """Program a weight matrix into 'OPCM': per-output-channel symmetric
     quantization + nibble decomposition + kernel pre-padding, all once.
-    w: (K, N) -> PlannedWeights with codes (K, N), scale (1, N)."""
+    w: (K, N) -> DensePlan with codes (K, N), scale (1, N)."""
     assert w.ndim == 2, "prepare_weights expects (K, N)"
     return plan_from_qtensor(quantize(w, bits=cfg.weight_bits, axis=(0,)),
                              cfg)
 
 
 def prepare_depthwise_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM
-                              ) -> PlannedDepthwiseWeights:
+                              ) -> DepthwisePlan:
     """Program depthwise filters (K=kh*kw, C) with per-channel scales."""
     assert w.ndim == 2, "prepare_depthwise_weights expects (K, C)"
     w_q = quantize(w, bits=cfg.weight_bits, axis=(0,))
-    return PlannedDepthwiseWeights(
+    return DepthwisePlan(
         values=w_q.values, scale=w_q.scale,
         planes=to_nibbles(w_q.values, w_q.bits), bits=w_q.bits, cfg=cfg)
 
 
-def _coerce_plan(w_q: Union[PlannedWeights, QTensor], cfg: PimConfig
-                 ) -> PlannedWeights:
-    if isinstance(w_q, PlannedWeights):
+def prepare_expert_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM
+                           ) -> ExpertStackedPlan:
+    """Program an expert-stacked weight tensor (E, K, N): one stationary
+    'OPCM' array per expert, vmapped over the expert axis."""
+    assert w.ndim == 3, "prepare_expert_weights expects (E, K, N)"
+    dense = jax.vmap(lambda m: prepare_weights(m, cfg))(w)
+    return ExpertStackedPlan(dense=dense, num_experts=w.shape[0])
+
+
+def _coerce_plan(w_q: Union[DensePlan, QTensor], cfg: PimConfig
+                 ) -> DensePlan:
+    if isinstance(w_q, DensePlan):
         return w_q
     # Legacy QTensor callers: plan on the fly (decomposition per call).
     return plan_from_qtensor(w_q, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Exact math (bit-sliced integer datapath)
+# ---------------------------------------------------------------------------
 def _plane_matmuls(a_planes: jax.Array, w_planes: jax.Array) -> jax.Array:
     """All (act-plane, weight-plane) integer matmuls.
 
@@ -227,6 +362,59 @@ def _shift_add(partials: jax.Array) -> jax.Array:
                          axes=[[0, 1], [0, 1]])
 
 
+def _check_widths(cfg: PimConfig) -> None:
+    if cfg.weight_bits > 8 or cfg.act_bits > 8:
+        raise NotImplementedError(
+            "exact int32 shift-and-add supports operand widths <= 8 bits "
+            "(the paper evaluates 4b and 8b); wider operands would need an "
+            "int64/float accumulation path")
+
+
+def _quantize_activations(x2: jax.Array, cfg: PimConfig):
+    """Dynamic per-row activation quantization + nibble decomposition (the
+    MDL array re-tuning per driven vector). Returns (QTensor, planes)."""
+    a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))
+    return a_q, to_nibbles(a_q.values, cfg.act_bits)       # (Pa, M, K)
+
+
+def exact_jnp_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                       bias: Optional[jax.Array] = None) -> jax.Array:
+    """``exact-jnp`` substrate: integer plane matmuls + shift-and-add in
+    plain jnp, dequantized eagerly. Bit-identical to the Pallas route
+    without a bias; the kernel's fused bias contracts mul+add to an FMA
+    (one rounding) and may differ from this two-step add by 1 ulp."""
+    a_q, a_planes = _quantize_activations(x2, cfg)
+    w_planes = plan.planes[:, :plan.k, :plan.n]
+    acc = _shift_add(_plane_matmuls(a_planes, w_planes))
+    out = acc.astype(jnp.float32) * a_q.scale * plan.scale
+    if bias is not None:
+        out = out + bias.astype(jnp.float32).reshape(1, -1)
+    return out
+
+
+def exact_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                          bias: Optional[jax.Array] = None) -> jax.Array:
+    """``exact-pallas`` substrate: the Pallas kernel with the fused dequant
+    epilogue (per-row act-scale × per-col weight-scale + optional bias on
+    the int32 accumulator tile in VMEM)."""
+    from repro.kernels.pim_matmul import ops as pim_ops
+    a_q, a_planes = _quantize_activations(x2, cfg)
+    pad_k = plan.planes.shape[1] - plan.k
+    if pad_k:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_k)))
+    bias_p = None
+    if bias is not None:
+        pad_n = plan.planes.shape[2] - plan.n
+        bias_p = jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
+                         ((0, 0), (0, pad_n)))
+    return pim_ops.pim_matmul_fused(a_planes, plan.planes, a_q.scale,
+                                    plan.padded_scale, bias=bias_p,
+                                    interpret=cfg.interpret)[:, :plan.n]
+
+
+# ---------------------------------------------------------------------------
+# Analog readout math
+# ---------------------------------------------------------------------------
 def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
                           cfg: PimConfig, cell_noise_sigma: float,
                           rng: Optional[jax.Array]) -> jax.Array:
@@ -238,6 +426,12 @@ def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
       photodetector sums the chunk                     (in-waveguide interf.)
       5-bit ADC digitizes the chunk sum                (aggregation unit)
     Chunk sums are then accumulated digitally (SRAM accumulator).
+
+    With ``rng=None`` (and no explicitly requested sigma — the caller
+    raises otherwise) the stochastic transmission noise is skipped and the
+    model reduces to the deterministic transfer (ADC quantization only) —
+    the serving path uses this so decode stays reproducible; pass a key
+    for the accuracy-study noise model.
     """
     pa, m, k = a_planes.shape
     pw, _, n = w_planes.shape
@@ -251,9 +445,7 @@ def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
     w_c = w_planes.reshape(pw, kc, chunk, n).astype(jnp.float32)
     # chunk-local products summed by the photodetector:
     chunk_sums = jnp.einsum("amcq,wcqn->awcmn", a_c, w_c)
-    if cell_noise_sigma > 0.0:
-        if rng is None:
-            raise ValueError("analog mode with noise requires an rng key")
+    if cell_noise_sigma > 0.0 and rng is not None:
         # Multiplicative transmission noise enters per product; the summed
         # noise power over a chunk scales with the RMS product magnitude.
         prod_sq = jnp.einsum("amcq,wcqn->awcmn", a_c ** 2, w_c ** 2)
@@ -272,27 +464,121 @@ def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
     return jnp.sum(digitized, axis=2)  # digital accumulation over chunks
 
 
-def _check_widths(cfg: PimConfig) -> None:
-    if cfg.weight_bits > 8 or cfg.act_bits > 8:
-        raise NotImplementedError(
-            "exact int32 shift-and-add supports operand widths <= 8 bits "
-            "(the paper evaluates 4b and 8b); wider operands would need an "
-            "int64/float accumulation path")
+def analog_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                    bias: Optional[jax.Array] = None,
+                    rng: Optional[jax.Array] = None) -> jax.Array:
+    """``analog`` substrate: physical-readout model (per-WDM-chunk
+    photodetector sums -> transmission noise -> ADC quantization -> digital
+    shift-and-add). Pure jnp; the accuracy-study mode."""
+    a_q, a_planes = _quantize_activations(x2, cfg)
+    w_planes = plan.planes[:, :plan.k, :plan.n]
+    sigma = cfg.read_noise_sigma
+    if sigma > 0.0 and rng is None:
+        # an explicitly requested noise level must not silently vanish;
+        # only the implied default degrades to the deterministic readout
+        raise ValueError(
+            "analog substrate with an explicit read_noise_sigma > 0 "
+            "requires an rng key (pass rng=, or leave read_noise_sigma=0 "
+            "for the deterministic ADC-only readout)")
+    if sigma == 0.0:
+        global _warned_noiseless_analog
+        if rng is None and not _warned_noiseless_analog:
+            # once per process: loud enough for accuracy studies without
+            # repeating at every trace site in a jit'd serving stack
+            _warned_noiseless_analog = True
+            warnings.warn(
+                "analog readout without an rng key models the "
+                "deterministic transfer only (ADC quantization, no "
+                "transmission noise); pass rng= for the noise study",
+                stacklevel=2)
+        sigma = _IMPLIED_READ_NOISE_SIGMA
+    partials = _analog_plane_matmuls(a_planes, w_planes, cfg, sigma, rng)
+    # float shift-and-add (values are no longer exact integers)
+    pa, pw = partials.shape[0], partials.shape[1]
+    sh = (16.0 ** jnp.arange(pa))[:, None] * (16.0 ** jnp.arange(pw))[None]
+    acc = jnp.tensordot(sh.astype(jnp.float32), partials,
+                        axes=[[0, 1], [0, 1]])
+    out = acc.astype(jnp.float32) * a_q.scale * plan.scale
+    if bias is not None:
+        out = out + bias.astype(jnp.float32).reshape(1, -1)
+    return out
 
 
-def pim_matmul(x: jax.Array, w_q: Union[PlannedWeights, QTensor],
+# ---------------------------------------------------------------------------
+# Emulation math (weight-quantization-only; the old serve escape hatch)
+# ---------------------------------------------------------------------------
+def emulate_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                     bias: Optional[jax.Array] = None) -> jax.Array:
+    """``emulate`` substrate: float matmul against the dequantized codes.
+
+    Models the *weight* programming (cell-density quantization) only — no
+    dynamic activation quantization, no integer datapath. Numerically the
+    quantize-dequantize ('fake quantize') emulation serving historically
+    used, now a first-class substrate."""
+    out = x2.astype(jnp.float32) @ plan.dequantized()
+    if bias is not None:
+        out = out + bias.astype(jnp.float32).reshape(1, -1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Depthwise (grouped-convolution) math
+# ---------------------------------------------------------------------------
+def depthwise_exact_matmul(x: jax.Array, plan: DepthwisePlan,
+                           cfg: PimConfig) -> jax.Array:
+    """Grouped (depthwise) convolution through the bit-sliced engine.
+
+    Each channel's patch vector is one driven vector against that channel's
+    stationary filter column: integer plane products + shift-and-add per
+    channel, dequantized with per-(row, channel) act scales × per-channel
+    weight scales. Exact on every substrate (the analog readout study
+    covers the GEMM layers; depthwise K = kh*kw is below one WDM chunk).
+
+    x: (..., K, C) float patches — K = kh*kw taps, C channels -> (..., C).
+    """
+    orig_shape = x.shape
+    k, c = orig_shape[-2], orig_shape[-1]
+    x3 = x.reshape(-1, k, c)
+    a_q = quantize(x3, bits=cfg.act_bits, axis=(1,))       # scale (M, 1, C)
+    a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K, C)
+    partials = jnp.einsum("amkc,wkc->awmc",
+                          a_planes.astype(jnp.int32),
+                          plan.planes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+    acc = _shift_add(partials)                             # (M, C) int32
+    out = acc.astype(jnp.float32) * a_q.scale[:, 0, :] * plan.scale
+    return out.reshape(orig_shape[:-2] + (c,))
+
+
+def depthwise_emulate_matmul(x: jax.Array, plan: DepthwisePlan,
+                             cfg: PimConfig) -> jax.Array:
+    """``emulate`` substrate depthwise route: float einsum against the
+    dequantized per-channel filters."""
+    return jnp.einsum("...kc,kc->...c", x.astype(jnp.float32),
+                      plan.dequantized())
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points (dispatch through repro.engine)
+# ---------------------------------------------------------------------------
+def pim_matmul(x: jax.Array, w_q: Union[DensePlan, QTensor],
                cfg: Optional[PimConfig] = None,
                rng: Optional[jax.Array] = None,
                act_scale_axis: int = -1,
                bias: Optional[jax.Array] = None) -> jax.Array:
-    """Matrix multiply through the OPIMA PIM datapath.
+    """Matrix multiply through the OPIMA PIM datapath (legacy wrapper).
+
+    Dispatches through the substrate registry in :mod:`repro.engine`; the
+    route is named by ``(cfg or plan.cfg).resolved_substrate``. New code
+    should call ``engine.matmul(x, plan)`` directly.
 
     Args:
       x: float activations, shape (..., K).
       w_q: planned weights (K, N) from :func:`prepare_weights` (a legacy
         :class:`QTensor` is planned on the fly).
       cfg: PIM operating point; defaults to the plan's own config.
-      rng: PRNG key, required if ``cfg.analog`` and noise sigma > 0.
+      rng: PRNG key for the ``analog`` substrate's stochastic read noise
+        (``None`` -> deterministic ADC-only readout).
       act_scale_axis: axis for dynamic activation scales (per-row default).
       bias: optional (N,) float bias, applied inside the kernel's fused
         epilogue on the Pallas path (after dequantization on all paths).
@@ -301,94 +587,30 @@ def pim_matmul(x: jax.Array, w_q: Union[PlannedWeights, QTensor],
       float32 result of shape (..., N), de-quantized (+ bias).
     """
     if cfg is None:
-        cfg = w_q.cfg if isinstance(w_q, PlannedWeights) else DEFAULT_PIM
-    _check_widths(cfg)
-    plan = _coerce_plan(w_q, cfg)
-    orig_shape = x.shape
-    k = orig_shape[-1]
-    assert k == plan.k, f"contraction mismatch {k} vs plan {plan.k}"
-    m = 1
-    for d in orig_shape[:-1]:
-        m *= d
-    x2 = x.reshape(m, k)
-
-    a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))
-    a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K)
-
-    if cfg.analog:
-        w_planes = plan.planes[:, :plan.k, :plan.n]
-        sigma = cfg.read_noise_sigma
-        if sigma == 0.0:
-            sigma = DEFAULT_CELL.level_noise_sigma()
-        partials = _analog_plane_matmuls(a_planes, w_planes, cfg, sigma, rng)
-        # float shift-and-add (values are no longer exact integers)
-        pa, pw = partials.shape[0], partials.shape[1]
-        sh = (16.0 ** jnp.arange(pa))[:, None] * (16.0 ** jnp.arange(pw))[None]
-        acc = jnp.tensordot(sh.astype(jnp.float32), partials,
-                            axes=[[0, 1], [0, 1]])
-        out = acc.astype(jnp.float32) * a_q.scale * plan.scale
-        if bias is not None:
-            out = out + bias.astype(jnp.float32).reshape(1, -1)
-    elif cfg.use_pallas:
-        from repro.kernels.pim_matmul import ops as pim_ops
-        pad_k = plan.planes.shape[1] - plan.k
-        if pad_k:
-            a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_k)))
-        bias_p = None
-        if bias is not None:
-            pad_n = plan.planes.shape[2] - plan.n
-            bias_p = jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
-                             ((0, 0), (0, pad_n)))
-        out = pim_ops.pim_matmul_fused(a_planes, plan.planes, a_q.scale,
-                                       plan.padded_scale, bias=bias_p,
-                                       interpret=cfg.interpret)[:, :plan.n]
+        cfg = w_q.cfg if isinstance(w_q, Plan) else DEFAULT_PIM
+        plan = _coerce_plan(w_q, cfg)
+        if cfg.weight_bits != plan.bits:
+            # adopted QTensor codes define the weight width when the
+            # caller gave no cfg; an *explicit* mismatched cfg still
+            # trips engine.matmul's consistency guard below
+            cfg = dataclasses.replace(cfg, weight_bits=plan.bits)
     else:
-        w_planes = plan.planes[:, :plan.k, :plan.n]
-        acc = _shift_add(_plane_matmuls(a_planes, w_planes))
-        out = acc.astype(jnp.float32) * a_q.scale * plan.scale
-        if bias is not None:
-            out = out + bias.astype(jnp.float32).reshape(1, -1)
-
-    return out.reshape(orig_shape[:-1] + (plan.n,))
+        plan = _coerce_plan(w_q, cfg)
+    from repro.engine import api as _engine_api
+    return _engine_api.matmul(x, plan, cfg=cfg, bias=bias, rng=rng)
 
 
 def pim_depthwise_matmul(x: jax.Array,
-                         w_q: Union[PlannedDepthwiseWeights, jax.Array],
+                         w_q: Union[DepthwisePlan, jax.Array],
                          cfg: Optional[PimConfig] = None) -> jax.Array:
-    """Grouped (depthwise) convolution through the bit-sliced engine.
-
-    Each channel's patch vector is one driven vector against that channel's
-    stationary filter column: integer plane products + shift-and-add per
-    channel, dequantized with per-(row, channel) act scales × per-channel
-    weight scales. Always exact-mode (the analog readout study covers the
-    GEMM layers; depthwise K = kh*kw is below one WDM chunk anyway).
-
-    Args:
-      x: float patches, shape (..., K, C) — K = kh*kw taps, C channels.
-      w_q: planned depthwise weights (K, C), or a raw float (K, C) matrix
-        (planned on the fly).
-      cfg: PIM operating point; defaults to the plan's config.
-
-    Returns:
-      float32 (..., C).
-    """
-    if not isinstance(w_q, PlannedDepthwiseWeights):
+    """Grouped (depthwise) convolution (legacy wrapper; see
+    :func:`depthwise_exact_matmul`). x: (..., K, C) -> (..., C)."""
+    if not isinstance(w_q, DepthwisePlan):
         w_q = prepare_depthwise_weights(w_q, cfg or DEFAULT_PIM)
     if cfg is None:
         cfg = w_q.cfg
-    _check_widths(cfg)
-    orig_shape = x.shape
-    k, c = orig_shape[-2], orig_shape[-1]
-    x3 = x.reshape(-1, k, c)
-    a_q = quantize(x3, bits=cfg.act_bits, axis=(1,))       # scale (M, 1, C)
-    a_planes = to_nibbles(a_q.values, cfg.act_bits)        # (Pa, M, K, C)
-    partials = jnp.einsum("amkc,wkc->awmc",
-                          a_planes.astype(jnp.int32),
-                          w_q.planes.astype(jnp.int32),
-                          preferred_element_type=jnp.int32)
-    acc = _shift_add(partials)                             # (M, C) int32
-    out = acc.astype(jnp.float32) * a_q.scale[:, 0, :] * w_q.scale
-    return out.reshape(orig_shape[:-2] + (c,))
+    from repro.engine import api as _engine_api
+    return _engine_api.matmul(x, w_q, cfg=cfg)
 
 
 def pim_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
@@ -400,10 +622,10 @@ def pim_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
 
 
 def reference_quantized_matmul(x: jax.Array,
-                               w_q: Union[PlannedWeights, QTensor],
+                               w_q: Union[DensePlan, QTensor],
                                cfg: PimConfig = DEFAULT_PIM) -> jax.Array:
     """Oracle: plain int32 matmul of the quantized codes (no nibble
-    decomposition). Exact-mode PIM must match this bit-for-bit."""
+    decomposition). Exact substrates must match this bit-for-bit."""
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
     a_q = quantize(x2, bits=cfg.act_bits, axis=(1,))

@@ -1,0 +1,150 @@
+"""Plan persistence: serialize programmed 'OPCM' plans into checkpoints.
+
+Serving restarts can skip re-programming (quantize + nibble-decompose +
+pad) by saving the planned parameter tree once and restoring it on boot:
+
+  engine.save_plans(dir, plans)            # after plan_params_for_pim
+  plans, step, extras = engine.load_plans(dir)
+
+Rides on :mod:`repro.checkpoint.ckpt` (atomic publish, LATEST pointer,
+elastic restore): the plan tree's array leaves go into ``arrays.npz`` like
+any parameter tree, while a JSON *plan spec* — plan kinds, logical dims,
+and each plan's full :class:`~repro.core.pim.PimConfig` including its
+substrate name — travels in the manifest's ``extras``. ``load_plans``
+rebuilds the exact pytree template (plans and all) from that spec, so the
+caller needs no template of its own.
+
+Supported trees: arbitrary nestings of dict / list / tuple whose leaves
+are arrays or plans (:class:`DensePlan`, :class:`DepthwisePlan`,
+:class:`ExpertStackedPlan`) — the shape of the serving stack's planned
+parameter tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import pim
+
+PLANS_EXTRAS_KEY = "engine_plans"
+
+
+# ---------------------------------------------------------------------------
+# spec: JSON description of a plan tree (structure + dtypes, no data)
+# ---------------------------------------------------------------------------
+def _leaf_spec(x) -> Dict[str, Any]:
+    return {"shape": [int(d) for d in x.shape], "dtype": str(x.dtype)}
+
+
+def _cfg_spec(cfg: pim.PimConfig) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def describe_plan_tree(tree: Any) -> Dict[str, Any]:
+    """Recursively describe a tree of plans/arrays as JSON-able spec."""
+    if isinstance(tree, pim.ExpertStackedPlan):
+        return {"kind": "expert-plan", "num_experts": tree.num_experts,
+                "dense": describe_plan_tree(tree.dense)}
+    if isinstance(tree, pim.DensePlan):
+        return {"kind": "dense-plan", "bits": tree.bits, "k": tree.k,
+                "n": tree.n, "cfg": _cfg_spec(tree.cfg),
+                "leaves": [_leaf_spec(l) for l in
+                           (tree.values, tree.scale, tree.planes,
+                            tree.padded_scale)]}
+    if isinstance(tree, pim.DepthwisePlan):
+        return {"kind": "depthwise-plan", "bits": tree.bits,
+                "cfg": _cfg_spec(tree.cfg),
+                "leaves": [_leaf_spec(l) for l in
+                           (tree.values, tree.scale, tree.planes)]}
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "items": {str(k): describe_plan_tree(v)
+                          for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"kind": "list" if isinstance(tree, list) else "tuple",
+                "items": [describe_plan_tree(v) for v in tree]}
+    if hasattr(tree, "shape") and hasattr(tree, "dtype"):
+        return {"kind": "leaf", **_leaf_spec(tree)}
+    raise TypeError(f"save_plans cannot describe {type(tree).__name__}; "
+                    "supported: dict/list/tuple of arrays and plans")
+
+
+def _zeros(spec: Dict[str, Any]):
+    return jnp.zeros(tuple(spec["shape"]), jnp.dtype(spec["dtype"]))
+
+
+def build_plan_template(spec: Dict[str, Any]) -> Any:
+    """Rebuild a zero-filled pytree template from a plan-tree spec."""
+    kind = spec["kind"]
+    if kind == "expert-plan":
+        return pim.ExpertStackedPlan(
+            dense=build_plan_template(spec["dense"]),
+            num_experts=spec["num_experts"])
+    if kind == "dense-plan":
+        z = [_zeros(l) for l in spec["leaves"]]
+        return pim.DensePlan(values=z[0], scale=z[1], planes=z[2],
+                             padded_scale=z[3], bits=spec["bits"],
+                             k=spec["k"], n=spec["n"],
+                             cfg=pim.PimConfig(**spec["cfg"]))
+    if kind == "depthwise-plan":
+        z = [_zeros(l) for l in spec["leaves"]]
+        return pim.DepthwisePlan(values=z[0], scale=z[1], planes=z[2],
+                                 bits=spec["bits"],
+                                 cfg=pim.PimConfig(**spec["cfg"]))
+    if kind == "dict":
+        return {k: build_plan_template(v) for k, v in spec["items"].items()}
+    if kind in ("list", "tuple"):
+        items = [build_plan_template(v) for v in spec["items"]]
+        return items if kind == "list" else tuple(items)
+    if kind == "leaf":
+        return _zeros(spec)
+    raise ValueError(f"unknown plan-spec kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+def save_plans(directory: str, plans: Any, step: int = 0,
+               extras: Optional[Dict[str, Any]] = None) -> str:
+    """Persist a tree of programmed plans (and interleaved arrays).
+
+    The substrate name and full PimConfig of every plan land in the
+    manifest ``extras`` (under :data:`PLANS_EXTRAS_KEY`), so a restart can
+    both rebuild the tree and audit what operating point it was programmed
+    for. Returns the published checkpoint path."""
+    all_extras = dict(extras or {})
+    all_extras[PLANS_EXTRAS_KEY] = describe_plan_tree(plans)
+    return ckpt.save_checkpoint(directory, step, plans, extras=all_extras)
+
+
+def load_plans(directory: str, step: Optional[int] = None
+               ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore a plan tree saved by :func:`save_plans`.
+
+    Returns ``(plans, step, extras)`` with :data:`PLANS_EXTRAS_KEY`
+    stripped from ``extras``. Raises FileNotFoundError when no checkpoint
+    exists and ValueError when the checkpoint was not written by
+    :func:`save_plans`."""
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no plan checkpoint under {directory}")
+    manifest_path = os.path.join(directory, f"step_{step:08d}",
+                                 "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    spec = manifest.get("extras", {}).get(PLANS_EXTRAS_KEY)
+    if spec is None:
+        raise ValueError(
+            f"checkpoint at {directory} step {step} has no "
+            f"{PLANS_EXTRAS_KEY!r} spec — was it written by save_plans?")
+    template = build_plan_template(spec)
+    plans, step, extras = ckpt.restore_checkpoint(directory, template,
+                                                  step=step)
+    extras = {k: v for k, v in extras.items() if k != PLANS_EXTRAS_KEY}
+    return plans, step, extras

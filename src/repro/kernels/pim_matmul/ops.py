@@ -1,10 +1,13 @@
 """jit'd public wrappers for the PIM matmul kernel.
 
-``pim_matmul_fused`` is the planned-weight entry point used by the PIM
-engine's default exact path (int32 accumulation + in-kernel dequant
-epilogue); ``pim_matmul_int`` is the raw integer-plane entry point;
-``pim_matmul_quantized`` is the end-to-end float API (quantize -> planes ->
-fused kernel -> float) used by serving layers that hold raw codes.
+``pim_matmul_fused`` is the planned-weight entry point behind the engine's
+``exact-pallas`` substrate (int32 accumulation + in-kernel dequant
+epilogue; see :mod:`repro.engine.substrates`); ``pim_matmul_int`` is the
+raw integer-plane entry point; ``pim_matmul_quantized`` is the end-to-end
+float API (quantize -> planes -> fused kernel -> float) for callers that
+hold raw codes. Model code should not call these directly — program a
+plan with ``engine.program`` and execute with ``engine.matmul`` so the
+route stays substrate-keyed.
 """
 from __future__ import annotations
 

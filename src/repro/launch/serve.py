@@ -1,16 +1,32 @@
 """Serving driver: batched prefill + decode with optional OPIMA-PIM
 weight execution (the paper's weight-stationary deployment path for LMs).
 
-With --pim, every projection weight (attention q/k/v/o, MLP up/gate/down)
-is *programmed once* into planned 'OPCM' form — quantized to 4-bit cells,
-nibble-decomposed, pre-padded for the Pallas kernel — and the serving
-matmuls drive activations past the stationary planes through the
-bit-sliced PIM engine (exact mode, fused dequant epilogue). An OPIMA
-hardware latency/energy estimate for the request batch is reported next
-to the wall-clock numbers (beyond-paper extension: the paper only
-evaluates CNNs). ``--pim-emulate`` falls back to the old fake-quantize
-emulation (quantize-dequantize + float matmul), which models the weight
-quantization but not the activation quantization or integer datapath.
+With ``--pim``, projection weights (attention q/k/v/o, MLP up/gate/down,
+shared-expert MLPs) *and* MoE expert stacks are *programmed once* into
+planned 'OPCM' form through :mod:`repro.engine` — quantized to 4-bit
+cells, nibble-decomposed, pre-padded for the Pallas kernel — and the
+serving matmuls drive activations past the stationary plans. The route is
+selected by substrate name, one of :func:`repro.engine.available_substrates`:
+
+  --pim-substrate exact-pallas   bit-exact integer datapath, fused dequant
+                                 epilogue in the Pallas kernel (default)
+  --pim-substrate exact-jnp      same math in plain jnp (bit-identical on
+                                 this path — serving fuses no bias)
+  --pim-substrate analog         photodetector/ADC readout model
+                                 (deterministic: no stochastic read noise
+                                 during serving)
+  --pim-substrate emulate        weight-quantization-only float matmul
+                                 (the historical --pim-emulate behaviour,
+                                 now a first-class substrate)
+
+Weights the engine does not cover yet (SSM projections, embedding tables)
+keep the fake-quantize emulation so every substrate still models their
+cell-density quantization. ``--plan-dir DIR`` persists the programmed
+parameter tree via :func:`repro.engine.save_plans`, so a serving restart
+skips re-programming (:func:`repro.engine.load_plans` restores it, plans
+and all). An OPIMA hardware latency/energy estimate for the request batch
+is reported next to the wall-clock numbers (beyond-paper extension: the
+paper only evaluates CNNs).
 
 Run (reduced, CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
@@ -20,67 +36,87 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.configs.base import ModelConfig, get_config
-from repro.core.pim import PimConfig, prepare_weights
+from repro.core.pim import PimConfig
 from repro.core.perfmodel import network_perf, total_power_w
 from repro.core.workloads import DenseSpec
 from repro.models.lm import decode_step, init_lm, prefill
 from repro.quant.quantize import fake_quantize
 
-# projection-weight suffixes executed on the PIM engine (see layers.py
-# naming conventions); embedding/unembedding tables stay digital.
-_PROJ_SUFFIXES = ("_dh", "_hd")
-
-
-def quantize_params_for_pim(params, cfg: PimConfig):
-    """--pim-emulate path: symmetric per-output-channel fake-quantization
-    of all 2-D projection weights at the cell bit density. This emulates
-    the *weight* programming only — the float matmul skips the engine's
-    dynamic activation quantization and integer datapath. Kept as an
-    escape hatch and for MoE/SSM weights the planned path doesn't cover."""
-    def q(path, x):
-        name = getattr(path[-1], "key", "")
-        if x.ndim >= 2 and any(str(name).endswith(s) for s in
-                               ("_dh", "_hd", "_vd", "_dn", "_edf", "_efd")):
-            return fake_quantize(x, cfg.weight_bits, axis=(x.ndim - 2,))
-        return x
-    return jax.tree_util.tree_map_with_path(q, params)
+# Weight suffixes the PIM deployment touches (layers.py naming
+# conventions) — the single source of truth for both the plan path and
+# the fake-quantize path.
+PIM_WEIGHT_SUFFIXES = ("_dh", "_hd", "_vd", "_dn", "_edf", "_efd")
+# Of those, the ones programmed onto the real engine: 2-D projections
+# stacked over layers, and expert-stacked MoE tensors.
+_PLANNED_PROJ_SUFFIXES = ("_dh", "_hd")
+_EXPERT_STACK_SUFFIXES = ("_edf", "_efd")
+# Blocks whose weights are planned (nested dicts, e.g. moe/shared, are
+# walked recursively).
+_PLANNED_BLOCKS = ("attn", "xattn", "mlp", "moe")
 
 
 def plan_params_for_pim(params, cfg: PimConfig):
-    """Program projection weights into planned 'OPCM' form (real PIM
-    execution). Each scan-stacked (L, K, N) projection in the attention /
-    cross-attention / MLP blocks becomes a vmapped
-    :class:`~repro.core.pim.PlannedWeights` — quantize + nibble-decompose
-    + kernel pre-pad happen here, once, at weight-programming time. The
-    planned pytrees flow through ``lax.scan`` like any other parameter and
-    ``layers.proj`` dispatches them onto the PIM engine.
+    """Program the deployable weights into planned 'OPCM' form.
 
-    Weights the planned path does not yet cover (MoE experts, SSM
-    projections, embedding tables) keep the fake-quantize emulation so
-    ``--pim`` still models their cell-density quantization, exactly as
-    the pre-planned path did."""
-    plan_stack = jax.vmap(lambda w: prepare_weights(w, cfg))
-    planned_blocks = ("attn", "xattn", "mlp")
+    Each scan-stacked (L, K, N) projection in the attention /
+    cross-attention / MLP / shared-expert blocks becomes a vmapped
+    :class:`~repro.core.pim.DensePlan`, and each (L, E, K, N) MoE expert
+    stack becomes a vmapped :class:`~repro.core.pim.ExpertStackedPlan` —
+    quantize + nibble-decompose + kernel pre-pad happen here, once, at
+    weight-programming time, on the substrate ``cfg`` names. The planned
+    pytrees flow through ``lax.scan`` like any other parameter;
+    ``layers.proj`` and ``moe_apply`` dispatch them onto the engine.
 
-    def _is_planned(keys, name, x) -> bool:
-        return (name.endswith(_PROJ_SUFFIXES) and getattr(x, "ndim", 0) == 3
-                and any(k in planned_blocks for k in keys))
+    Weights the planned path does not cover (SSM projections, embedding
+    tables — any ``PIM_WEIGHT_SUFFIXES`` leaf without an engine route)
+    keep quantize-dequantize fake-quantization so every substrate still
+    models their cell-density programming."""
+    sub = engine.get_substrate(cfg.resolved_substrate)
+    plan_stack = jax.vmap(lambda w: sub.program(w, cfg))
+    plan_expert_stack = jax.vmap(lambda w: sub.program_experts(w, cfg))
+
+    def _will_plan(keys, name, x) -> bool:
+        if not any(k in _PLANNED_BLOCKS for k in keys):
+            return False
+        ndim = getattr(x, "ndim", 0)
+        return ((name.endswith(_PLANNED_PROJ_SUFFIXES) and ndim == 3) or
+                (name.endswith(_EXPERT_STACK_SUFFIXES) and ndim == 4))
+
+    def _quantizable(name, x) -> bool:
+        return (getattr(x, "ndim", 0) >= 2 and
+                name.endswith(PIM_WEIGHT_SUFFIXES))
+
+    def _program_block(blk, keys):
+        # eligibility predicates (_will_plan / _quantizable) are shared
+        # with the q() pass below, so the two passes cannot drift apart
+        out = {}
+        for k, v in blk.items():
+            if isinstance(v, dict):
+                out[k] = _program_block(v, keys + [k])
+            elif _will_plan(keys + [k], k, v):
+                out[k] = (plan_expert_stack(v) if v.ndim == 4
+                          else plan_stack(v))
+            elif _quantizable(k, v):
+                out[k] = fake_quantize(v, cfg.weight_bits, axis=(v.ndim - 2,))
+            else:
+                out[k] = v
+        return out
 
     def q(path, x):
         keys = [str(getattr(p, "key", "")) for p in path]
         name = keys[-1] if keys else ""
-        if _is_planned(keys, name, x):
+        if _will_plan(keys, name, x):
             return x   # replaced by a plan below; don't quantize twice
-        if getattr(x, "ndim", 0) >= 2 and any(name.endswith(s) for s in
-                                              ("_dh", "_hd", "_vd", "_dn",
-                                               "_edf", "_efd")):
+        if _quantizable(name, x):
             return fake_quantize(x, cfg.weight_bits, axis=(x.ndim - 2,))
         return x
 
@@ -89,13 +125,12 @@ def plan_params_for_pim(params, cfg: PimConfig):
         if layers_key not in params:
             continue
         layers = dict(out[layers_key])
-        for blk in planned_blocks:
+        for blk in _PLANNED_BLOCKS:
             if blk in layers:
-                # plan from the *original* float weights: the engine does
-                # its own cell quantization at programming time
-                layers[blk] = {
-                    k: plan_stack(v) if _is_planned((blk,), k, v) else v
-                    for k, v in params[layers_key][blk].items()}
+                # program from the *original* float weights: the engine
+                # does its own cell quantization at programming time
+                layers[blk] = _program_block(params[layers_key][blk],
+                                             [layers_key, blk])
         out[layers_key] = layers
     return out
 
@@ -115,6 +150,11 @@ def opima_lm_estimate(cfg: ModelConfig, batch: int, prompt: int, gen: int,
                       DenseSpec(f"l{li}.v", cfg.d_model, kv_dim),
                       DenseSpec(f"l{li}.o", heads_dim, cfg.d_model)]
         if cfg.is_moe:
+            # hardware sizing assumes the routed drive: only the k selected
+            # experts' stationary arrays are driven per token (undriven
+            # arrays cost nothing in a weight-stationary bank). The
+            # software _moe_pim route computes all E experts for numerical
+            # simplicity; that digital-emulation cost is not an OPIMA cost.
             ff = cfg.moe_d_ff * cfg.experts_per_token
             specs += [DenseSpec(f"l{li}.moe_up", cfg.d_model, 2 * ff),
                       DenseSpec(f"l{li}.moe_dn", ff, cfg.d_model)]
@@ -149,20 +189,103 @@ def opima_lm_estimate(cfg: ModelConfig, batch: int, prompt: int, gen: int,
     }
 
 
+def _params_digest(params) -> str:
+    """Content hash of the source parameter tree: restored plans must have
+    been programmed from these exact weights, not merely a tree with the
+    same arch name and geometry."""
+    import hashlib
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
+                plan_dir: Optional[str]):
+    """Program (or restore) the PIM parameter tree.
+
+    With ``plan_dir`` set, a previously saved plan checkpoint is restored
+    — serving restarts skip re-programming — and a fresh programming run
+    is persisted for the next boot. The checkpoint records the model
+    identity/geometry alongside the PIM operating point; any mismatch
+    (different arch, reduced dims, substrate, or bit width) re-programs
+    instead of serving stale plans."""
+    if not plan_dir:
+        return plan_params_for_pim(params, pim_cfg)
+    # the digest hashes every weight host-side, so only pay for it when a
+    # plan checkpoint is actually in play
+    want = {"substrate": pim_cfg.resolved_substrate,
+            "weight_bits": pim_cfg.weight_bits,
+            "act_bits": pim_cfg.act_bits,
+            "arch": cfg.name,
+            "num_layers": cfg.num_layers,
+            "d_model": cfg.d_model,
+            "vocab_size": cfg.vocab_size,
+            "params_digest": _params_digest(params)}
+    try:
+        planned, _, extras = engine.load_plans(plan_dir)
+    except FileNotFoundError:
+        pass
+    except Exception as e:  # noqa: BLE001 — any restore failure
+        # (bad zip, leaf-count assertion, version-skewed PimConfig
+        # fields, ...) must degrade to re-programming, not crash the
+        # restart the checkpoint exists to speed up
+        print(f"[serve] could not restore plans from {plan_dir} "
+              f"({type(e).__name__}: {e}); re-programming")
+    else:
+        got = {k: extras.get(k) for k in want}
+        if got == want:
+            print(f"[serve] restored programmed plans from {plan_dir} "
+                  f"(substrate={got['substrate']})")
+            return planned
+        # plans execute on the cfg stamped into them, so a stale
+        # checkpoint must not masquerade as the requested route
+        print(f"[serve] plan checkpoint at {plan_dir} was programmed "
+              f"for {got}, requested {want}; re-programming")
+    planned = plan_params_for_pim(params, pim_cfg)
+    try:
+        engine.save_plans(plan_dir, planned, extras=want)
+        print(f"[serve] saved programmed plans to {plan_dir}")
+    except OSError as e:
+        # the in-memory programming already succeeded; an unwritable
+        # plan_dir should cost the next restart, not this request
+        print(f"[serve] could not save plans to {plan_dir} "
+              f"({type(e).__name__}: {e}); serving without a checkpoint")
+    return planned
+
+
 def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
           layers: Optional[int] = None, d_model: Optional[int] = None,
           pim: bool = False, pim_bits: int = 4, pim_emulate: bool = False,
-          greedy: bool = True) -> Dict[str, Any]:
+          greedy: bool = True, pim_substrate: Optional[str] = None,
+          plan_dir: Optional[str] = None) -> Dict[str, Any]:
+    """Run one batched serve request; ``pim_substrate`` names the engine
+    route (default ``exact-pallas``; ``pim_emulate=True`` is the
+    deprecated spelling of ``pim_substrate="emulate"``)."""
     cfg = get_config(arch)
     if layers or d_model:
         cfg = cfg.reduced(num_layers=layers or 2, d_model=d_model or 64,
                           vocab=min(cfg.vocab_size, 512))
     key = jax.random.PRNGKey(0)
     params = init_lm(cfg, key)
-    pim_cfg = PimConfig(weight_bits=pim_bits, act_bits=pim_bits)
+    if pim_emulate:
+        warnings.warn("pim_emulate is deprecated; use "
+                      "pim_substrate='emulate'", DeprecationWarning,
+                      stacklevel=2)
+        # None means "no explicit request" — any explicit substrate,
+        # including exact-pallas, conflicts with the deprecated flag
+        if pim_substrate not in (None, "emulate"):
+            raise ValueError(
+                "--pim-emulate (deprecated) conflicts with an explicit "
+                f"--pim-substrate {pim_substrate!r}; drop --pim-emulate "
+                "and pass --pim-substrate emulate instead")
+        substrate = "emulate"
+    else:
+        substrate = pim_substrate or "exact-pallas"
+    pim_cfg = PimConfig(weight_bits=pim_bits, act_bits=pim_bits,
+                        substrate=substrate)
     if pim:
-        params = (quantize_params_for_pim(params, pim_cfg) if pim_emulate
-                  else plan_params_for_pim(params, pim_cfg))
+        params = _pim_params(params, cfg, pim_cfg, plan_dir)
 
     rng = np.random.default_rng(0)
     batch_in: Dict[str, Any] = {
@@ -206,6 +329,7 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
         "decode_s_per_token": t_decode / gen,
     }
     if pim:
+        result["pim_substrate"] = substrate
         result.update(opima_lm_estimate(cfg, batch, prompt_len, gen,
                                         pim_cfg))
     return result
@@ -221,16 +345,25 @@ def main() -> None:
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--pim", action="store_true")
     ap.add_argument("--pim-bits", type=int, default=4)
+    ap.add_argument("--pim-substrate", default=None,
+                    choices=engine.available_substrates(),
+                    help="engine substrate the programmed plans execute on "
+                         "(default: exact-pallas)")
     ap.add_argument("--pim-emulate", action="store_true",
-                    help="fake-quantize weights instead of real planned-"
-                         "weight PIM execution")
+                    help="deprecated alias for --pim-substrate emulate")
+    ap.add_argument("--plan-dir", default=None,
+                    help="persist/restore programmed plans here so "
+                         "restarts skip re-programming")
     args = ap.parse_args()
     res = serve(args.arch, args.batch, args.prompt_len, args.gen,
                 args.layers, args.d_model, args.pim, args.pim_bits,
-                args.pim_emulate)
+                args.pim_emulate, pim_substrate=args.pim_substrate,
+                plan_dir=args.plan_dir)
     print(f"[serve] prefill {res['prefill_s']*1e3:.1f}ms, "
           f"decode {res['decode_s_per_token']*1e3:.1f}ms/tok")
     print(f"[serve] tokens:\n{res['generated']}")
+    if "pim_substrate" in res:
+        print(f"[serve] pim_substrate = {res['pim_substrate']}")
     for k, v in res.items():
         if k.startswith("opima_"):
             print(f"[serve] {k} = {v:.4g}")

@@ -1,6 +1,11 @@
 """Attention: GQA/MQA, qk-norm, QKV bias, sliding windows, RoPE;
 full / blockwise(flash-style) prefill and KV-cache decode paths.
 
+All q/k/v/o projections go through :func:`repro.models.layers.proj`: when
+serving programs the projection weights into PIM plans
+(``plan_params_for_pim``), these matmuls execute on the engine substrate
+recorded in each plan — attention code itself carries no PIM flags.
+
 Blockwise attention (online softmax over KV chunks via lax.scan) bounds
 activation memory at O(S · block) instead of O(S²) — required for the 32k
 prefill shapes; it is numerically the same computation (tested vs. full).

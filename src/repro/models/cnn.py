@@ -16,13 +16,14 @@ expects a smaller input than the current map, a max-pool bridges the gap).
 """
 from __future__ import annotations
 
+import zlib
 from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pim import (PimConfig, pim_depthwise_matmul, pim_matmul,
-                            prepare_depthwise_weights, prepare_weights)
+from repro import engine
+from repro.core.pim import PimConfig
 from repro.core.workloads import ConvSpec, DenseSpec, LayerSpec
 from repro.quant.quantize import fake_quantize
 
@@ -68,11 +69,13 @@ def _maxpool(x: jax.Array, factor: int) -> jax.Array:
 class _Executor:
     """Structure-aware layer executor.
 
-    With ``pim`` set, every layer's weights are *planned once* per executor
-    (quantize + nibble-decompose + pad at programming time, keyed on the
-    deterministic layer name) and every matmul drives activations past the
-    stationary planes — the paper's weight-stationary OPCM mapping. The
-    layer bias is fused into the kernel's dequant epilogue.
+    With ``pim`` set, every layer's weights are *programmed once* per
+    executor through :func:`repro.engine.program` (quantize +
+    nibble-decompose + pad at programming time, keyed on the deterministic
+    layer name) and every matmul drives activations past the stationary
+    plans via :func:`repro.engine.matmul` — the paper's weight-stationary
+    OPCM mapping on whichever substrate ``pim.resolved_substrate`` names.
+    The layer bias is fused into the kernel's dequant epilogue.
     """
 
     def __init__(self, params: Params, quant_bits: int = 0,
@@ -82,25 +85,32 @@ class _Executor:
         self.quant_bits = quant_bits
         self.pim = pim
         self.rng = rng
-        # layer name -> planned weights; pass plan_cnn_weights(...) output
+        # layer name -> programmed plan; pass plan_cnn_weights(...) output
         # to keep weights stationary across forwards
         self._plans: Dict[str, Any] = {} if plans is None else plans
 
     def _plan(self, name: str, w: jax.Array, depthwise: bool = False):
         plan = self._plans.get(name)
         if plan is None:
-            plan = (prepare_depthwise_weights(w, self.pim) if depthwise
-                    else prepare_weights(w, self.pim))
+            plan = engine.program(w, self.pim,
+                                  kind="depthwise" if depthwise else "dense")
             self._plans[name] = plan
         return plan
+
+    def _layer_rng(self, name: str):
+        # fold the layer name in so same-shaped layers draw independent
+        # analog noise realizations instead of one correlated sample
+        if self.rng is None:
+            return None
+        return jax.random.fold_in(self.rng, zlib.crc32(name.encode()))
 
     def matmul(self, x: jax.Array, w: jax.Array, per_col_axis, name: str,
                bias: Optional[jax.Array] = None) -> jax.Array:
         if self.quant_bits:
             w = fake_quantize(w, self.quant_bits, axis=per_col_axis)
         if self.pim is not None:
-            return pim_matmul(x, self._plan(name, w), self.pim, self.rng,
-                              bias=bias)
+            return engine.matmul(x, self._plan(name, w), cfg=self.pim,
+                                 bias=bias, rng=self._layer_rng(name))
         y = x @ w
         return y if bias is None else y + bias
 
@@ -121,9 +131,10 @@ class _Executor:
             if self.quant_bits:
                 w = fake_quantize(w, self.quant_bits, axis=(0,))
             if self.pim is not None:
-                # per-channel planned weights through the bit-sliced engine
-                y = pim_depthwise_matmul(
-                    cols, self._plan(spec.name, w, depthwise=True), self.pim)
+                # per-channel programmed plan through the bit-sliced engine
+                y = engine.matmul(cols,
+                                  self._plan(spec.name, w, depthwise=True),
+                                  cfg=self.pim)
             else:
                 y = jnp.einsum("bhwkc,kc->bhwc", cols, w)
             y = y + p["b"]
@@ -154,12 +165,12 @@ def plan_cnn_weights(params: Params, layers: Sequence[LayerSpec],
         p = params[spec.name]
         if isinstance(spec, ConvSpec) and spec.groups != 1:
             w = p["w"].reshape(spec.kh * spec.kw, spec.in_c)
-            plans[spec.name] = prepare_depthwise_weights(w, pim)
+            plans[spec.name] = engine.program(w, pim, kind="depthwise")
         elif isinstance(spec, ConvSpec):
-            plans[spec.name] = prepare_weights(
+            plans[spec.name] = engine.program(
                 p["w"].reshape(-1, spec.out_c), pim)
         else:
-            plans[spec.name] = prepare_weights(p["w"], pim)
+            plans[spec.name] = engine.program(p["w"], pim)
     return plans
 
 

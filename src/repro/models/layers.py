@@ -15,7 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pim import PlannedWeights, pim_matmul
+from repro.engine import Plan, matmul as engine_matmul
 
 Params = Dict[str, jax.Array]
 
@@ -23,13 +23,14 @@ Params = Dict[str, jax.Array]
 def proj(x: jax.Array, w) -> jax.Array:
     """Projection matmul with weight-stationary PIM dispatch.
 
-    When ``w`` is a :class:`~repro.core.pim.PlannedWeights` (the serving
+    When ``w`` is a programmed :class:`~repro.core.pim.Plan` (the serving
     stack programs projection weights into 'OPCM' once via
-    ``plan_params_for_pim``), the matmul runs through the bit-sliced PIM
-    engine's fused Pallas path; otherwise it is a plain float matmul.
+    ``plan_params_for_pim``), the matmul runs through the engine on the
+    plan's recorded substrate — the plan itself names the route, so no
+    mode flags appear here; otherwise it is a plain float matmul.
     """
-    if isinstance(w, PlannedWeights):
-        return pim_matmul(x, w).astype(x.dtype)
+    if isinstance(w, Plan):
+        return engine_matmul(x, w).astype(x.dtype)
     return x @ w
 
 

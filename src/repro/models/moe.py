@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN: top-k router + dropless grouped matmul.
 
-Two execution paths:
+Three execution paths:
 
 * ``local``  — sort-by-expert + ``jax.lax.ragged_dot`` over the full expert
   stack. Exact/dropless. Used on a single device and inside the EP shards.
@@ -9,6 +9,12 @@ Two execution paths:
   routes the *local* token batch against its own experts with ragged_dot,
   and a psum over 'model' combines contributions. All ops inside the shard
   are local, so nothing depends on SPMD partitioning of ragged_dot.
+* ``pim``    — expert weights programmed into the PIM engine as
+  :class:`~repro.core.pim.ExpertStackedPlan` (serving's
+  ``plan_params_for_pim``): every token drives past every expert's
+  stationary 'OPCM' array and the aggregation applies the router weights —
+  the weight-stationary dropless mapping. Selected by the params
+  themselves (plans instead of float stacks), not by a flag.
 
 Router follows qwen3-moe: softmax over all experts, top-k, renormalize.
 Aux losses: load-balance (Switch-style) + router z-loss, returned to the
@@ -25,6 +31,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import current_context
+from repro.engine import ExpertStackedPlan, matmul as engine_matmul
 from repro.models.layers import Params, dense_init
 
 
@@ -107,6 +114,29 @@ def _moe_local(x2: jax.Array, probs: jax.Array, ids: jax.Array,
     return out.astype(x2.dtype)
 
 
+def _moe_pim(x2: jax.Array, probs: jax.Array, ids: jax.Array,
+             wi: ExpertStackedPlan, wg: ExpertStackedPlan,
+             wo: ExpertStackedPlan) -> jax.Array:
+    """Expert FFN on the PIM engine: dropless weight-stationary mapping.
+
+    Each expert's (D, F) / (F, D) matrices are stationary 'OPCM' arrays;
+    the token batch is driven past all of them (broadcast up/gate, paired
+    down-projection) and the router weights are applied at aggregation —
+    no gather/scatter, matching how a programmed PIM array bank executes.
+    x2: (T, D); probs/ids: (T, k). Returns (T, D).
+    """
+    t = x2.shape[0]
+    e = wi.num_experts
+    x2f = x2.astype(jnp.float32)
+    h = engine_matmul(x2f, wi)                       # (E, T, F)
+    g = engine_matmul(x2f, wg)                       # (E, T, F)
+    hidden = jax.nn.silu(g) * h                      # (E, T, F)
+    y = engine_matmul(hidden, wo, paired=True)       # (E, T, D)
+    w = jnp.zeros((t, e), jnp.float32)
+    w = w.at[jnp.arange(t)[:, None], ids].add(probs)
+    return jnp.einsum("te,etd->td", w, y).astype(x2.dtype)
+
+
 def _moe_ep_body(x2, probs, ids, wi, wg, wo, *, num_experts: int,
                  ep_axis: str, capacity_factor: float = 1.25):
     """shard_map body: wi/wg/wo hold the LOCAL expert slice.
@@ -153,7 +183,9 @@ def moe_apply(p: Params, x: jax.Array, experts_per_token: int,
     """MoE FFN. x: (B, S, D) -> (B, S, D). Auto-selects EP when a sharding
     context with a 'model' axis is active."""
     b, s, d = x.shape
-    num_experts = p["wi_edf"].shape[0]
+    wi_edf = p["wi_edf"]
+    pim_experts = isinstance(wi_edf, ExpertStackedPlan)
+    num_experts = wi_edf.num_experts if pim_experts else wi_edf.shape[0]
     x2 = x.reshape(-1, d)
     probs, ids, lb, z = _route(p["router_de"], x2, experts_per_token)
     if aux is not None:
@@ -161,7 +193,11 @@ def moe_apply(p: Params, x: jax.Array, experts_per_token: int,
         aux["moe_z_loss"] = aux.get("moe_z_loss", 0.0) + z
 
     ctx = current_context()
-    if ctx is not None and "model" in ctx.mesh.axis_names and \
+    if pim_experts:
+        # expert stacks are programmed 'OPCM' plans: run the engine route
+        # (single-host serving path; EP sharding keeps float stacks)
+        out2 = _moe_pim(x2, probs, ids, wi_edf, p["wg_edf"], p["wo_efd"])
+    elif ctx is not None and "model" in ctx.mesh.axis_names and \
             ctx.mesh.shape["model"] > 1 and \
             num_experts % ctx.mesh.shape["model"] == 0:
         mesh = ctx.mesh
