@@ -162,8 +162,15 @@ def pim_plan_bench() -> List[Row]:
     return plan_execute_bench()
 
 
+def serving_bench() -> List[Row]:
+    """Static vs continuous batching tokens/s on a mixed-length arrival
+    trace (see benchmarks/serving_bench.py)."""
+    from benchmarks.serving_bench import serving_bench as _bench
+    return _bench("exact-jnp")
+
+
 ALL_BENCHMARKS = [
     fig2_cell_dse, fig7_grouping, fig8_power, fig9_latency,
     fig10_photonic_latency, fig11_epb, fig12_fpsw, table2_quantization,
-    adc_ablation, kernel_bench, pim_plan_bench,
+    adc_ablation, kernel_bench, pim_plan_bench, serving_bench,
 ]

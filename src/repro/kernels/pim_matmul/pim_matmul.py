@@ -51,6 +51,13 @@ DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
 
+# Mosaic register-tile geometry for float32 operands: the fused epilogue's
+# scale vectors are padded to full (sublane, lane) tiles so compiled
+# lowering never sees a width-1 minor axis (interpret mode accepts those;
+# real-TPU Mosaic wants lane-aligned operands).
+LANE = 128
+SUBLANE = 8
+
 
 def kernel_tiles(m: int, k: int, n: int, bm: int = DEFAULT_BM,
                  bn: int = DEFAULT_BN, bk: int = DEFAULT_BK
@@ -143,16 +150,23 @@ def pim_matmul_pallas(a_planes: jax.Array, w_planes: jax.Array,
 
 
 def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
-                             pa: int, pw: int, has_bias: bool):
+                             pa: int, pw: int, has_bias: bool,
+                             lane_pad: bool):
     """One (m, n, k) grid step with the fused dequant epilogue.
 
     a_ref: (Pa, bm, bk) int8  — activation nibble planes tile
     w_ref: (Pw, bk, bn) int8  — weight nibble planes tile
-    as_ref: (bm, 1) f32       — per-row activation scales
-    ws_ref: (1, bn) f32       — per-column weight scales
-    [b_ref: (1, bn) f32]      — optional bias (when has_bias)
+    as_ref: (bm, LANE) f32    — per-row activation scales, value in lane 0
+                                ((bm, 1) when lane_pad=False)
+    ws_ref: (SUBLANE, bn) f32 — per-column weight scales, value in row 0
+                                ((1, bn) when lane_pad=False)
+    [b_ref]                   — optional bias, same layout as ws_ref
     o_ref: (bm, bn) f32       — dequantized output tile (last k step)
     acc_ref: (bm, bn) int32   — VMEM accumulator scratch
+
+    ``lane_pad`` selects the register-tile-aligned scale layout; only the
+    slice read in the epilogue differs — arithmetic is identical, and the
+    parity test pins the two layouts bit-for-bit against each other.
     """
     if has_bias:
         b_ref, o_ref, acc_ref = rest
@@ -179,20 +193,28 @@ def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
     def _write_out():
         # Same op order as the jnp path: (acc * a_scale) * w_scale (+ bias),
         # elementwise in f32 — bit-identical dequantization.
-        out = acc_ref[...].astype(jnp.float32) * as_ref[...] * ws_ref[...]
+        if lane_pad:
+            a_s = as_ref[...][:, :1]        # (bm, 1): value lives in lane 0
+            w_s = ws_ref[...][:1, :]        # (1, bn): value lives in row 0
+        else:
+            a_s = as_ref[...]
+            w_s = ws_ref[...]
+        out = acc_ref[...].astype(jnp.float32) * a_s * w_s
         if has_bias:
-            out = out + b_ref[...]
+            out = out + (b_ref[...][:1, :] if lane_pad else b_ref[...])
         o_ref[...] = out
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "interpret"))
+                   static_argnames=("bm", "bn", "bk", "interpret",
+                                    "lane_pad"))
 def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
                             a_scale: jax.Array, w_scale: jax.Array,
                             bias: Optional[jax.Array] = None,
                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                             bk: int = DEFAULT_BK,
-                            interpret: bool = False) -> jax.Array:
+                            interpret: bool = False,
+                            lane_pad: bool = True) -> jax.Array:
     """Bit-sliced integer matmul with the fused dequantization epilogue.
 
     Args:
@@ -203,6 +225,10 @@ def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
       bias: optional (1, N) f32, added after dequantization.
       bm/bn/bk: VMEM tile sizes (MXU-aligned).
       interpret: run in interpreter mode (CPU validation).
+      lane_pad: pad the width-1 scale vectors to full (SUBLANE, LANE)
+        register tiles so compiled Mosaic lowering is clean (default).
+        ``False`` keeps the legacy width-1 BlockSpecs — interpret-mode
+        only, retained as the parity baseline for tests.
 
     Returns:
       (M, N) float32 — bit-exact vs. ref.pim_matmul_fused_ref.
@@ -229,20 +255,33 @@ def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
     n_k = kp // bk
     has_bias = bias is not None
 
+    if lane_pad:
+        # scale vectors padded (with zeros) to full register tiles; the
+        # epilogue reads only lane 0 / sublane 0, so values are unchanged
+        a_scale = jnp.pad(a_scale, ((0, 0), (0, LANE - 1)))
+        w_scale = jnp.pad(w_scale, ((0, SUBLANE - 1), (0, 0)))
+        if has_bias:
+            bias = jnp.pad(bias, ((0, SUBLANE - 1), (0, 0)))
+        as_spec = pl.BlockSpec((bm, LANE), lambda i, j, s: (i, 0))
+        ws_spec = pl.BlockSpec((SUBLANE, bn), lambda i, j, s: (0, j))
+    else:
+        as_spec = pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0))
+        ws_spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
+
     in_specs = [
         pl.BlockSpec((pa, bm, bk), lambda i, j, s: (0, i, s)),
         pl.BlockSpec((pw, bk, bn), lambda i, j, s: (0, s, j)),
-        pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
-        pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        as_spec,
+        ws_spec,
     ]
     inputs = [a_planes, w_planes, a_scale, w_scale]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        in_specs.append(ws_spec)
         inputs.append(bias)
 
     out = pl.pallas_call(
         functools.partial(_pim_matmul_fused_kernel, n_k=n_k, pa=pa, pw=pw,
-                          has_bias=has_bias),
+                          has_bias=has_bias, lane_pad=lane_pad),
         grid=(mp // bm, np_ // bn, n_k),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),

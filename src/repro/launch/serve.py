@@ -1,5 +1,20 @@
-"""Serving driver: batched prefill + decode with optional OPIMA-PIM
-weight execution (the paper's weight-stationary deployment path for LMs).
+"""Serving driver: static batched prefill + decode, or continuous
+batching through :mod:`repro.serving`, with optional OPIMA-PIM weight
+execution (the paper's weight-stationary deployment path for LMs).
+
+Two serving modes:
+
+  * static (default): one batch, lock-step decode — every request shares
+    a prompt length and finishes together.
+  * ``--continuous``: synthetic Poisson (or trace-driven) arrivals with
+    heterogeneous prompt/generation lengths stream through the
+    continuous-batching scheduler — a fixed pool of decode slots over
+    the same programmed plans, prefill interleaved with in-flight decode,
+    retired slots refilled immediately (see repro/serving/).
+
+``--metrics-json PATH`` dumps the full structured result (wall-clock
+tokens/s, per-request latency percentiles in continuous mode, the OPIMA
+hardware estimate) so benchmark trajectories parse a file, not stdout.
 
 With ``--pim``, projection weights (attention q/k/v/o, MLP up/gate/down,
 shared-expert MLPs) *and* MoE expert stacks are *programmed once* into
@@ -35,9 +50,10 @@ Run (reduced, CPU):
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import warnings
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -254,24 +270,13 @@ def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
     return planned
 
 
-def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
-          layers: Optional[int] = None, d_model: Optional[int] = None,
-          pim: bool = False, pim_bits: int = 4, pim_emulate: bool = False,
-          greedy: bool = True, pim_substrate: Optional[str] = None,
-          plan_dir: Optional[str] = None) -> Dict[str, Any]:
-    """Run one batched serve request; ``pim_substrate`` names the engine
-    route (default ``exact-pallas``; ``pim_emulate=True`` is the
-    deprecated spelling of ``pim_substrate="emulate"``)."""
-    cfg = get_config(arch)
-    if layers or d_model:
-        cfg = cfg.reduced(num_layers=layers or 2, d_model=d_model or 64,
-                          vocab=min(cfg.vocab_size, 512))
-    key = jax.random.PRNGKey(0)
-    params = init_lm(cfg, key)
+def _resolve_substrate(pim_substrate: Optional[str],
+                       pim_emulate: bool) -> str:
     if pim_emulate:
+        # stacklevel: _resolve_substrate -> _setup -> serve* -> user
         warnings.warn("pim_emulate is deprecated; use "
                       "pim_substrate='emulate'", DeprecationWarning,
-                      stacklevel=2)
+                      stacklevel=4)
         # None means "no explicit request" — any explicit substrate,
         # including exact-pallas, conflicts with the deprecated flag
         if pim_substrate not in (None, "emulate"):
@@ -279,13 +284,61 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
                 "--pim-emulate (deprecated) conflicts with an explicit "
                 f"--pim-substrate {pim_substrate!r}; drop --pim-emulate "
                 "and pass --pim-substrate emulate instead")
-        substrate = "emulate"
-    else:
-        substrate = pim_substrate or "exact-pallas"
+        return "emulate"
+    return pim_substrate or "exact-pallas"
+
+
+def _setup(arch: str, layers: Optional[int], d_model: Optional[int],
+           pim: bool, pim_bits: int, pim_emulate: bool,
+           pim_substrate: Optional[str], plan_dir: Optional[str]):
+    """Shared serve bring-up: config reduction, param init, and (with
+    ``pim``) weight programming — identical for both serving modes, so
+    continuous mode streams past exactly the plans static mode uses."""
+    cfg = get_config(arch)
+    if layers or d_model:
+        cfg = cfg.reduced(num_layers=layers or 2, d_model=d_model or 64,
+                          vocab=min(cfg.vocab_size, 512))
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    substrate = _resolve_substrate(pim_substrate, pim_emulate)
     pim_cfg = PimConfig(weight_bits=pim_bits, act_bits=pim_bits,
                         substrate=substrate)
     if pim:
         params = _pim_params(params, cfg, pim_cfg, plan_dir)
+    return cfg, params, substrate, pim_cfg
+
+
+def write_metrics_json(path: str, result: Dict[str, Any]) -> None:
+    """Dump a serve result as structured JSON (np arrays -> lists), so
+    benchmark trajectories stop parsing stdout."""
+    def conv(v):
+        if isinstance(v, np.ndarray):
+            return v.tolist()
+        if isinstance(v, (np.integer,)):
+            return int(v)
+        if isinstance(v, (np.floating,)):
+            return float(v)
+        if isinstance(v, dict):
+            return {k: conv(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [conv(x) for x in v]
+        return v
+    with open(path, "w") as f:
+        json.dump(conv(result), f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
+          layers: Optional[int] = None, d_model: Optional[int] = None,
+          pim: bool = False, pim_bits: int = 4, pim_emulate: bool = False,
+          greedy: bool = True, pim_substrate: Optional[str] = None,
+          plan_dir: Optional[str] = None,
+          metrics_json: Optional[str] = None) -> Dict[str, Any]:
+    """Run one batched serve request; ``pim_substrate`` names the engine
+    route (default ``exact-pallas``; ``pim_emulate=True`` is the
+    deprecated spelling of ``pim_substrate="emulate"``)."""
+    cfg, params, substrate, pim_cfg = _setup(
+        arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
+        plan_dir)
 
     rng = np.random.default_rng(0)
     batch_in: Dict[str, Any] = {
@@ -322,16 +375,131 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
     jax.block_until_ready(logits)
     t_decode = time.time() - t0
 
+    total_s = t_prefill + t_decode
     result = {
+        "mode": "static",
+        "arch": cfg.name,
         "generated": np.concatenate(
             [np.asarray(t) for t in out_tokens], axis=1),
         "prefill_s": t_prefill,
         "decode_s_per_token": t_decode / gen,
+        "generated_tokens": batch * gen,
+        "tokens_per_s": batch * gen / total_s if total_s > 0 else 0.0,
     }
     if pim:
         result["pim_substrate"] = substrate
         result.update(opima_lm_estimate(cfg, batch, prompt_len, gen,
                                         pim_cfg))
+    if metrics_json:
+        write_metrics_json(metrics_json, result)
+    return result
+
+
+def _load_trace(trace_file: str, vocab: int, seed: int) -> List[Any]:
+    """Trace-driven arrivals: a JSON list of request records, each with
+    ``arrival`` (float steps) and either explicit ``tokens`` or a
+    ``prompt_len`` (tokens drawn deterministically from ``seed``), plus
+    ``gen`` (max new tokens)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    with open(trace_file) as f:
+        records = json.load(f)
+    reqs = []
+    for i, rec in enumerate(records):
+        if "gen" not in rec:
+            raise ValueError(
+                f"trace record {i} in {trace_file} is missing 'gen' "
+                f"(max new tokens): {rec}")
+        if "tokens" in rec:
+            toks = np.asarray(rec["tokens"], np.int32)
+        elif "prompt_len" in rec:
+            toks = rng.integers(0, vocab,
+                                size=(int(rec["prompt_len"]),)).astype(
+                                    np.int32)
+        else:
+            raise ValueError(
+                f"trace record {i} in {trace_file} needs either "
+                f"'tokens' or 'prompt_len': {rec}")
+        reqs.append(Request(request_id=rec.get("id", i), tokens=toks,
+                            max_new_tokens=int(rec["gen"]),
+                            arrival=float(rec.get("arrival", 0.0))))
+    return reqs
+
+
+def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
+                     prompt_len: int = 16, gen: int = 8,
+                     layers: Optional[int] = None,
+                     d_model: Optional[int] = None, pim: bool = False,
+                     pim_bits: int = 4, pim_emulate: bool = False,
+                     pim_substrate: Optional[str] = None,
+                     plan_dir: Optional[str] = None,
+                     arrival_rate: float = 0.5,
+                     trace_file: Optional[str] = None, seed: int = 0,
+                     metrics_json: Optional[str] = None) -> Dict[str, Any]:
+    """Continuous-batching serve: requests with heterogeneous arrival
+    times and prompt/generation lengths stream through a fixed pool of
+    ``num_slots`` decode slots backed by the same programmed plans the
+    static path uses.
+
+    Without ``trace_file``, a synthetic Poisson trace is generated:
+    exponential inter-arrivals at ``arrival_rate`` requests/step, prompt
+    lengths mixed in [prompt_len//4, prompt_len], generation lengths in
+    [max(1, gen//4), gen]. ``prompt_len``/``gen`` therefore bound the
+    slot geometry: prompts pad to ``prompt_len``, the KV cache rows are
+    ``prompt_len + gen`` long.
+    """
+    from repro.serving import ContinuousScheduler, poisson_trace
+    cfg, params, substrate, pim_cfg = _setup(
+        arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
+        plan_dir)
+    if trace_file:
+        requests = _load_trace(trace_file, cfg.vocab_size, seed)
+        if not requests:
+            raise ValueError(f"trace file {trace_file} contains no "
+                             "requests")
+        prompt_pad = max(int(np.asarray(r.tokens).shape[0])
+                         for r in requests)
+        max_len = prompt_pad + max(r.max_new_tokens for r in requests)
+    else:
+        p_lo = max(1, prompt_len // 4)
+        g_lo = max(1, gen // 4)
+        requests = poisson_trace(
+            n=num_requests, rate=arrival_rate,
+            prompt_lens=list(range(p_lo, prompt_len + 1)),
+            gen_lens=list(range(g_lo, gen + 1)),
+            vocab=cfg.vocab_size, seed=seed)
+        prompt_pad, max_len = prompt_len, prompt_len + gen
+    sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
+                                prompt_pad=prompt_pad, max_len=max_len)
+    sched.warmup()   # keep first-call compile out of the metered run
+    run = sched.run(requests)
+
+    result: Dict[str, Any] = dict(run.metrics)
+    result["arch"] = cfg.name
+    result["requests"] = [
+        {"id": c.request_id, "prompt_len": int(c.prompt.shape[0]),
+         "tokens": c.tokens, "arrival_step": c.arrival_step,
+         "ttft_steps": c.ttft_steps, "latency_steps": c.latency_steps}
+        for c in run.completions]
+    if pim:
+        result["pim_substrate"] = substrate
+        # OPIMA hardware-side estimate for the aggregate workload: one
+        # weight-stationary pass of the network per sequential token
+        # position (true prompt lengths — the hardware would not drive
+        # pad positions) plus one per decode step; the slot batch's rows
+        # stream through the programmed arrays within a pass.
+        est = opima_lm_estimate(cfg, batch=1, prompt=0, gen=1, pim=pim_cfg)
+        pass_s = est["opima_latency_ms_per_token_batch"] / 1e3
+        total_passes = run.metrics["decode_steps"] + sum(
+            int(c.prompt.shape[0]) for c in run.completions)
+        if pass_s > 0:
+            result["opima_latency_ms_per_token_batch"] = pass_s * 1e3
+            result["opima_request_s"] = pass_s * total_passes
+            result["opima_tokens_per_s"] = (
+                run.metrics["generated_tokens"] / (pass_s * total_passes))
+            result["opima_power_w"] = est["opima_power_w"]
+    if metrics_json:
+        write_metrics_json(metrics_json, result)
     return result
 
 
@@ -354,19 +522,60 @@ def main() -> None:
     ap.add_argument("--plan-dir", default=None,
                     help="persist/restore programmed plans here so "
                          "restarts skip re-programming")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: Poisson/trace arrivals "
+                         "through the slot scheduler (repro/serving/)")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="decode-slot pool size (continuous mode)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic request count (continuous mode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="Poisson arrivals per decode step; <= 0 means "
+                         "one burst at t=0 (continuous mode)")
+    ap.add_argument("--trace-file", default=None,
+                    help="JSON arrival trace instead of synthetic "
+                         "Poisson traffic (continuous mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the structured run metrics to this path")
     args = ap.parse_args()
-    res = serve(args.arch, args.batch, args.prompt_len, args.gen,
-                args.layers, args.d_model, args.pim, args.pim_bits,
-                args.pim_emulate, pim_substrate=args.pim_substrate,
-                plan_dir=args.plan_dir)
-    print(f"[serve] prefill {res['prefill_s']*1e3:.1f}ms, "
-          f"decode {res['decode_s_per_token']*1e3:.1f}ms/tok")
-    print(f"[serve] tokens:\n{res['generated']}")
+    if args.continuous:
+        res = serve_continuous(
+            args.arch, num_slots=args.num_slots,
+            num_requests=args.requests, prompt_len=args.prompt_len,
+            gen=args.gen, layers=args.layers, d_model=args.d_model,
+            pim=args.pim, pim_bits=args.pim_bits,
+            pim_emulate=args.pim_emulate,
+            pim_substrate=args.pim_substrate, plan_dir=args.plan_dir,
+            arrival_rate=args.arrival_rate, trace_file=args.trace_file,
+            seed=args.seed, metrics_json=args.metrics_json)
+        print(f"[serve] continuous: {res['num_requests']} requests through "
+              f"{res['num_slots']} slots, {res['decode_steps']} decode "
+              f"steps, {res['prefills']} prefills "
+              f"(traces: {res['prefill_traces']}/{res['decode_traces']})")
+        print(f"[serve] {res['generated_tokens']} tokens, "
+              f"{res['tokens_per_s']:.1f} tok/s wall, "
+              f"occupancy {res['mean_slot_occupancy']:.2f}")
+        print(f"[serve] ttft p50/p90/p99 = {res['ttft_steps_p50']:.1f}/"
+              f"{res['ttft_steps_p90']:.1f}/{res['ttft_steps_p99']:.1f} "
+              f"steps; latency p50/p90/p99 = {res['latency_steps_p50']:.1f}/"
+              f"{res['latency_steps_p90']:.1f}/"
+              f"{res['latency_steps_p99']:.1f} steps")
+    else:
+        res = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                    args.layers, args.d_model, args.pim, args.pim_bits,
+                    args.pim_emulate, pim_substrate=args.pim_substrate,
+                    plan_dir=args.plan_dir, metrics_json=args.metrics_json)
+        print(f"[serve] prefill {res['prefill_s']*1e3:.1f}ms, "
+              f"decode {res['decode_s_per_token']*1e3:.1f}ms/tok")
+        print(f"[serve] tokens:\n{res['generated']}")
     if "pim_substrate" in res:
         print(f"[serve] pim_substrate = {res['pim_substrate']}")
     for k, v in res.items():
         if k.startswith("opima_"):
             print(f"[serve] {k} = {v:.4g}")
+    if args.metrics_json:
+        print(f"[serve] metrics written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

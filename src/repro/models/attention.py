@@ -165,11 +165,19 @@ def blockwise_attention(q, k, v, positions, window=0, causal=True,
 # KV-cache decode
 # ---------------------------------------------------------------------------
 def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
-                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
-    return {
-        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
-        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
-    }
+                  dtype=jnp.bfloat16, layers: Optional[int] = None
+                  ) -> Dict[str, jax.Array]:
+    """Zero-initialized KV cache: k/v of shape (B, S, kv, hd).
+
+    With ``layers`` set, the arrays carry a leading stacked-layer axis —
+    (L, B, S, kv, hd), the scan-over-layers layout. This is the single
+    source of truth for KV-cache construction: ``lm.init_cache`` and the
+    serving slot cache (:mod:`repro.serving.slots`) both build on it.
+    """
+    shape = (batch, max_len, num_kv_heads, head_dim)
+    if layers is not None:
+        shape = (layers,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
@@ -179,9 +187,15 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                      seq_shard: bool = False
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode. x: (b, 1, d); cache k/v: (b, S, kv, hd);
-    index: scalar current position. Returns (out (b,1,d'), new cache)."""
+    index: current position — a scalar shared by the whole batch (static
+    lock-step decode) or a per-row (b,) vector (continuous batching: each
+    slot sits at its own sequence offset and the new K/V land at per-row
+    positions). Returns (out (b,1,d'), new cache)."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), index, jnp.int32)
+    index = jnp.asarray(index, jnp.int32)
+    per_slot = index.ndim == 1
+    positions = index[:, None] if per_slot else jnp.full((b, 1), index,
+                                                         jnp.int32)
     q, k_new, v_new = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
                                    positions, rope_theta, norm_eps)
     # layout choice (EXPERIMENTS.md §Perf iter 1 + follow-up): when the kv
@@ -194,17 +208,24 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         spec = "kv_cache"
     else:
         spec = "kv_cache_decode"
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, index, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, index, 0, 0))
+    if per_slot:
+        # per-row writes: slot i appends at its own offset index[i]
+        def upd(c, new, i):
+            return jax.lax.dynamic_update_slice(c, new, (i, 0, 0))
+        k = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), index)
+        v = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), index)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
     k = constrain(k, spec)
     v = constrain(v, spec)
     s_max = k.shape[1]
     k_pos = jnp.arange(s_max, dtype=jnp.int32)[None].repeat(b, 0)
-    valid = k_pos <= index
+    valid = k_pos <= positions           # (b, s_max); per-row when per_slot
     w = jnp.asarray(window)
-    valid &= jnp.where(w > 0, index - k_pos < w, True)
+    valid &= jnp.where(w > 0, positions - k_pos < w, True)
     out = _sdpa(q, k, v, jnp.broadcast_to(valid[:, None, :], (b, 1, s_max)))
     out = out.reshape(b, 1, num_heads * head_dim)
     return proj(out, p["wo_hd"]), {"k": k, "v": v}

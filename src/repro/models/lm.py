@@ -225,9 +225,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     cache: Dict[str, jax.Array] = {}
     l = cfg.num_layers
     if cfg.block_type in ("attn", "hybrid"):
-        cache["k"] = jnp.zeros((l, batch, max_len, cfg.num_kv_heads,
-                                cfg.head_dim), dtype)
-        cache["v"] = jnp.zeros_like(cache["k"])
+        # attention.init_kv_cache is the single source of truth for KV
+        # geometry; layers= stacks it into the scan-over-layers layout
+        cache.update(attn.init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                        cfg.head_dim, dtype, layers=l))
     if cfg.block_type in ("ssm", "hybrid"):
         d_inner, nheads, conv_dim = ssm_mod.ssm_dims(
             cfg.d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
@@ -237,17 +238,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         cache["conv_tail"] = jnp.zeros((l, batch, ssm_mod.CONV_K - 1,
                                         conv_dim), jnp.float32)
     if cfg.encoder_layers:
-        cache["xk"] = jnp.zeros((l, batch, enc_len, cfg.num_kv_heads,
-                                 cfg.head_dim), dtype)
-        cache["xv"] = jnp.zeros_like(cache["xk"])
+        xkv = attn.init_kv_cache(batch, enc_len, cfg.num_kv_heads,
+                                 cfg.head_dim, dtype, layers=l)
+        cache["xk"], cache["xv"] = xkv["k"], xkv["v"]
     return cache
 
 
 def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
-            max_len: int, cache_dtype=jnp.bfloat16
+            max_len: int, cache_dtype=jnp.bfloat16,
+            logits_index: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Process the prompt, build the KV/SSM cache sized to ``max_len``.
-    Returns (last-position logits (B, V), cache)."""
+    Returns (last-position logits (B, V), cache).
+
+    ``logits_index`` (a traced scalar) selects which position's logits to
+    return instead of the default last position — the continuous-batching
+    scheduler prefills prompts right-padded to a fixed length and reads
+    the logits at the true prompt end (per-row token math is position-
+    independent and the causal mask zeroes padded keys exactly, so the
+    result is bit-identical to an unpadded prefill of the same prompt)."""
     x, positions, prefix_len = _embed_inputs(params, cfg, batch)
     b, s, _ = x.shape
     assert max_len >= s, (f"cache max_len={max_len} < prompt length {s} "
@@ -308,7 +317,11 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
             cache[key] = caches[key].astype(cache[key].dtype)
     x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
     table = params["embed_vd"] if cfg.tie_embeddings else params["unembed_vd"]
-    logits = _vocab_mask(cfg, unembed(table, x[:, -1:, :]))[:, 0]
+    if logits_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+    logits = _vocab_mask(cfg, unembed(table, x_last))[:, 0]
     return logits, cache
 
 
@@ -316,8 +329,10 @@ def decode_step(params: Params, cfg: ModelConfig,
                 cache: Dict[str, jax.Array], token: jax.Array,
                 index: jax.Array, seq_shard: bool = False
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode. token: (B, 1) int32; index: scalar int32 position.
-    Returns (logits (B, V), updated cache)."""
+    """One-token decode. token: (B, 1) int32; index: the current position
+    — a scalar shared by the batch (static lock-step serving) or a (B,)
+    per-row vector (continuous batching: every slot decodes at its own
+    offset; see :mod:`repro.serving`). Returns (logits (B, V), cache)."""
     x = embed(params["embed_vd"], token)
     windows = _windows(cfg)
 

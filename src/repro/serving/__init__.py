@@ -1,0 +1,34 @@
+"""Continuous-batching serving subsystem over the weight-stationary
+PIM engine.
+
+The engine programs weights once (``engine.program``) and amortizes them
+over traffic (``engine.matmul``); this package supplies the traffic
+shape that makes the amortization pay: a request scheduler that admits
+heterogeneous arrivals into a fixed pool of decode slots, interleaves
+prefill with in-flight decode, and refills retired slots immediately —
+all through step functions compiled exactly once.
+
+  slots.py      SlotAllocator + slot-indexed KV cache (masked prefill
+                scatter, per-slot sequence offsets)
+  scheduler.py  ContinuousScheduler (admission, step loop, latency/TTFT
+                accounting), Request, poisson_trace, static_generate
+  stream.py     Completion records and streaming callbacks
+"""
+from repro.serving.scheduler import (ContinuousScheduler, Request, RunResult,
+                                     poisson_trace, static_generate)
+from repro.serving.slots import SlotAllocator, init_slot_cache, write_prefill
+from repro.serving.stream import Completion, StreamCallbacks, TokenCollector
+
+__all__ = [
+    "Completion",
+    "ContinuousScheduler",
+    "Request",
+    "RunResult",
+    "SlotAllocator",
+    "StreamCallbacks",
+    "TokenCollector",
+    "init_slot_cache",
+    "poisson_trace",
+    "static_generate",
+    "write_prefill",
+]

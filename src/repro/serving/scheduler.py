@@ -1,0 +1,335 @@
+"""Continuous-batching scheduler over the weight-stationary PIM engine.
+
+OPIMA's economics are amortization: weights are programmed into the
+optical arrays once (``engine.program``) and pay for themselves under
+sustained traffic. This scheduler supplies that traffic shape — requests
+with heterogeneous arrival times, prompt lengths, and generation lengths
+stream through a *fixed pool of decode slots*, so activations keep moving
+past the same stationary plans with no idle lock-step barrier:
+
+  * admission: a ready request claims a free slot; its prompt is
+    right-padded to a fixed length and prefilled (one compiled prefill
+    serves every admission), and its KV lands in the slot's row of the
+    slot-indexed cache via a masked scatter.
+  * decode: one compiled step decodes *all* occupied slots at their own
+    sequence offsets (per-row index vector) — newly admitted requests
+    interleave with in-flight ones in the same batch.
+  * retirement: a finished sequence frees its slot immediately; the next
+    ready request refills it without retriggering compilation (every step
+    function sees fixed shapes — slot ids and lengths are traced values).
+
+Token-level semantics are identical to the static path: the first
+generated token comes from the prefill logits, token ``g`` (g >= 1) from
+a decode at position ``prompt_len + g - 1``. On exact substrates the
+produced tokens are bit-identical to a static ``prefill`` +
+``decode_step`` run of the same request (tested).
+
+The scheduler clock is virtual — one decode step advances time by 1.0 —
+so latency accounting (TTFT, per-request latency) is deterministic and
+trace-replayable; wall-clock throughput is reported alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, Hashable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serving import slots as slots_mod
+from repro.serving.stream import Completion, StreamCallbacks, TokenCollector
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request entering the queue."""
+
+    request_id: Hashable
+    tokens: np.ndarray           # (prompt_len,) int32 prompt tokens
+    max_new_tokens: int
+    arrival: float = 0.0         # virtual-clock arrival time (steps)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    req: Request
+    slot: int
+    admit_step: float
+    tokens: List[int]            # generated so far (index 0 from prefill)
+    pos: int                     # next cache write position (= prompt + g)
+
+
+@dataclasses.dataclass
+class RunResult:
+    completions: List[Completion]
+    metrics: Dict[str, Any]
+
+    def tokens_by_id(self) -> Dict[Hashable, np.ndarray]:
+        return {c.request_id: c.tokens for c in self.completions}
+
+
+def _percentiles(values: Sequence[float]) -> Dict[str, float]:
+    if not values:
+        return {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+    arr = np.asarray(values, np.float64)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p90": float(np.percentile(arr, 90)),
+            "p99": float(np.percentile(arr, 99))}
+
+
+def poisson_trace(n: int, rate: float, prompt_lens: Sequence[int],
+                  gen_lens: Sequence[int], vocab: int, seed: int = 0
+                  ) -> List[Request]:
+    """Synthetic Poisson arrival trace with mixed prompt/generation
+    lengths (exponential inter-arrivals at ``rate`` requests per step;
+    ``rate <= 0`` means everything arrives at t=0 — a burst)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.choice(np.asarray(prompt_lens)))
+        glen = int(rng.choice(np.asarray(gen_lens)))
+        toks = rng.integers(0, vocab, size=(plen,)).astype(np.int32)
+        out.append(Request(request_id=i, tokens=toks, max_new_tokens=glen,
+                           arrival=t))
+    return out
+
+
+def static_generate(params, cfg: ModelConfig, tokens: np.ndarray,
+                    max_new_tokens: int, cache_dtype=jnp.bfloat16
+                    ) -> np.ndarray:
+    """Straight static-batch reference for one request: unpadded prefill
+    + lock-step ``decode_step`` (the launch/serve.py loop, batch 1). The
+    continuous scheduler must reproduce these tokens bit-for-bit on exact
+    substrates."""
+    toks = jnp.asarray(tokens, jnp.int32)[None]
+    plen = int(toks.shape[1])
+    logits, cache = lm.prefill(params, cfg, {"tokens": toks},
+                               max_len=plen + max_new_tokens,
+                               cache_dtype=cache_dtype)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [int(tok[0])]
+    for g in range(1, max_new_tokens):
+        logits, cache = lm.decode_step(params, cfg, cache, tok[:, None],
+                                       jnp.int32(plen + g - 1))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return np.asarray(out, np.int32)
+
+
+class ContinuousScheduler:
+    """Iteration-level scheduler: admit -> decode -> retire, forever.
+
+    The two step functions are compiled once per scheduler instance
+    (fixed shapes: prompts padded to ``prompt_pad``, decode batch =
+    ``num_slots``); ``prefill_traces`` / ``decode_traces`` count actual
+    retraces so tests and benchmarks can assert compile-once behaviour.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, num_slots: int,
+                 prompt_pad: int, max_len: int,
+                 max_prefills_per_step: int = 1,
+                 cache_dtype=jnp.bfloat16):
+        slots_mod.check_slot_compatible(cfg)
+        if prompt_pad > max_len:
+            raise ValueError(f"prompt_pad={prompt_pad} exceeds "
+                             f"max_len={max_len}")
+        if max_prefills_per_step < 1:
+            raise ValueError("max_prefills_per_step must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.prompt_pad = prompt_pad
+        self.max_len = max_len
+        self.max_prefills_per_step = max_prefills_per_step
+        self.cache_dtype = cache_dtype
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        self._build_step_fns()
+
+    # ------------------------------------------------------------------
+    def _build_step_fns(self) -> None:
+        cfg, pad = self.cfg, self.prompt_pad
+
+        def admit(params, cache, toks, length, slot):
+            # trace-time side effect: counts retraces, not executions
+            self.prefill_traces += 1
+            logits, pcache = lm.prefill(
+                params, cfg, {"tokens": toks}, max_len=pad,
+                cache_dtype=self.cache_dtype, logits_index=length - 1)
+            cache = slots_mod.write_prefill(cache, pcache, slot, length)
+            return jnp.argmax(logits, -1).astype(jnp.int32)[0], cache
+
+        def decode(params, cache, toks, pos):
+            self.decode_traces += 1
+            logits, cache = lm.decode_step(params, cfg, cache, toks, pos)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # donate the slot cache: run() always rebinds it to the returned
+        # value, so XLA can update the KV buffers in place instead of
+        # copying the whole (L, S, max_len, kv, hd) cache every step
+        self._admit_fn = jax.jit(admit, donate_argnums=(1,))
+        self._decode_fn = jax.jit(decode, donate_argnums=(1,))
+
+    def warmup(self) -> None:
+        """Compile both step functions outside any timed window: one
+        dummy admission + decode on a scratch cache. ``serve_continuous``
+        calls this before its metered run so the dumped ``tokens_per_s``
+        tracks scheduling, not first-call XLA compile time."""
+        cache = slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                          self.max_len, self.cache_dtype)
+        toks = jnp.zeros((1, self.prompt_pad), jnp.int32)
+        tok0, cache = self._admit_fn(self.params, cache, toks,
+                                     jnp.int32(1), jnp.int32(0))
+        tok_vec = jnp.zeros((self.num_slots, 1), jnp.int32)
+        pos_vec = jnp.zeros((self.num_slots,), jnp.int32)
+        next_toks, cache = self._decode_fn(self.params, cache, tok_vec,
+                                           pos_vec)
+        jax.block_until_ready((tok0, next_toks))
+
+    def _validate(self, requests: Sequence[Request]) -> None:
+        seen = set()
+        for r in requests:
+            if r.request_id in seen:
+                raise ValueError(f"duplicate request_id {r.request_id!r}")
+            seen.add(r.request_id)
+            plen = int(np.asarray(r.tokens).shape[0])
+            if plen < 1 or r.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {r.request_id!r}: need a non-empty prompt "
+                    "and max_new_tokens >= 1")
+            if plen > self.prompt_pad:
+                raise ValueError(
+                    f"request {r.request_id!r}: prompt length {plen} "
+                    f"exceeds prompt_pad={self.prompt_pad}")
+            if plen + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.request_id!r}: prompt {plen} + "
+                    f"max_new_tokens {r.max_new_tokens} exceeds "
+                    f"max_len={self.max_len}")
+            if r.arrival < 0:
+                raise ValueError(
+                    f"request {r.request_id!r}: negative arrival time")
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            callbacks: Optional[StreamCallbacks] = None) -> RunResult:
+        """Serve every request to completion; returns completions plus
+        aggregate metrics. Reusable: each call builds a fresh slot cache
+        but reuses the compiled step functions."""
+        self._validate(requests)
+        cb = callbacks if callbacks is not None else TokenCollector()
+        pending = deque(sorted(
+            requests, key=lambda r: (r.arrival, str(r.request_id))))
+        alloc = slots_mod.SlotAllocator(self.num_slots)
+        cache = slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                          self.max_len, self.cache_dtype)
+        ready: List[Request] = []
+        active: Dict[int, _InFlight] = {}
+        completions: List[Completion] = []
+        step = 0.0
+        decode_steps = prefills = 0
+        occupancy_acc = 0
+        t0 = time.time()
+
+        def finish(st: _InFlight, at: float) -> None:
+            alloc.free(st.slot)
+            comp = Completion(
+                request_id=st.req.request_id,
+                prompt=np.asarray(st.req.tokens, np.int32),
+                tokens=np.asarray(st.tokens, np.int32),
+                arrival_step=st.req.arrival, admit_step=st.admit_step,
+                finish_step=at, slot=st.slot)
+            completions.append(comp)
+            cb.on_finish(comp)
+
+        while pending or ready or active:
+            while pending and pending[0].arrival <= step:
+                ready.append(pending.popleft())
+            if not ready and not active:
+                step = pending[0].arrival   # idle: jump to next arrival
+                continue
+            # --- admission: refill free slots from the ready queue ------
+            admitted = 0
+            while ready and admitted < self.max_prefills_per_step:
+                slot = alloc.alloc(ready[0].request_id)
+                if slot is None:
+                    break
+                req = ready.pop(0)
+                plen = int(np.asarray(req.tokens).shape[0])
+                padded = np.zeros((1, self.prompt_pad), np.int32)
+                padded[0, :plen] = np.asarray(req.tokens, np.int32)
+                tok0, cache = self._admit_fn(
+                    self.params, cache, jnp.asarray(padded),
+                    jnp.int32(plen), jnp.int32(slot))
+                prefills += 1
+                admitted += 1
+                cb.on_admit(req.request_id, slot, step + 1.0)
+                tok0 = int(tok0)
+                cb.on_token(req.request_id, tok0, 0)
+                st = _InFlight(req=req, slot=slot, admit_step=step + 1.0,
+                               tokens=[tok0], pos=plen)
+                if req.max_new_tokens == 1:
+                    finish(st, step + 1.0)
+                else:
+                    active[slot] = st
+            # --- one decode step over all occupied slots ----------------
+            if active:
+                tok_vec = np.zeros((self.num_slots, 1), np.int32)
+                pos_vec = np.zeros((self.num_slots,), np.int32)
+                for slot, st in active.items():
+                    tok_vec[slot, 0] = st.tokens[-1]
+                    pos_vec[slot] = st.pos
+                next_toks, cache = self._decode_fn(
+                    self.params, cache, jnp.asarray(tok_vec),
+                    jnp.asarray(pos_vec))
+                decode_steps += 1
+                occupancy_acc += len(active)
+                next_toks = np.asarray(next_toks)
+                for slot in sorted(active):
+                    st = active[slot]
+                    tok = int(next_toks[slot])
+                    st.tokens.append(tok)
+                    st.pos += 1
+                    cb.on_token(st.req.request_id, tok, len(st.tokens) - 1)
+                    if len(st.tokens) == st.req.max_new_tokens:
+                        del active[slot]
+                        finish(st, step + 1.0)
+            step += 1.0
+
+        wall_s = time.time() - t0
+        if alloc.num_active:
+            raise AssertionError(
+                f"slot leak: {alloc.num_active} slots still allocated "
+                f"after the queue drained ({alloc.active_slots()})")
+        total_tokens = int(sum(c.tokens.shape[0] for c in completions))
+        ttfts = [c.ttft_steps for c in completions]
+        lats = [c.latency_steps for c in completions]
+        metrics: Dict[str, Any] = {
+            "mode": "continuous",
+            "num_requests": len(completions),
+            "num_slots": self.num_slots,
+            "prompt_pad": self.prompt_pad,
+            "max_len": self.max_len,
+            "prefills": prefills,
+            "decode_steps": decode_steps,
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
+            "generated_tokens": total_tokens,
+            "wall_s": wall_s,
+            "tokens_per_s": total_tokens / wall_s if wall_s > 0 else 0.0,
+            "mean_slot_occupancy": (
+                occupancy_acc / (decode_steps * self.num_slots)
+                if decode_steps else 0.0),
+        }
+        for name, vals in (("ttft_steps", ttfts), ("latency_steps", lats)):
+            for pk, pv in _percentiles(vals).items():
+                metrics[f"{name}_{pk}"] = pv
+        return RunResult(completions=completions, metrics=metrics)

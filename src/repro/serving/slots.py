@@ -1,0 +1,128 @@
+"""Slot allocator + slot-indexed KV cache for continuous batching.
+
+A *slot* is one row of a fixed-size decode batch. The slot cache is a
+standard stacked-layer KV cache — built by :func:`repro.models.lm.init_cache`
+(which itself builds on :func:`repro.models.attention.init_kv_cache`, the
+single source of truth for KV geometry) — whose batch axis is indexed by
+slot id rather than by request. Requests come and go; the cache arrays,
+and therefore every compiled step function that closes over their shapes,
+stay put.
+
+Slot lifecycle:
+
+  1. ``SlotAllocator.alloc`` hands out a free slot id (host-side free
+     list — admission decisions are scheduler policy, not device code).
+  2. :func:`write_prefill` scatters one request's padded prefill KV into
+     the slot's row with a masked write: positions beyond the true prompt
+     length are zeroed, so a shorter prompt never inherits the previous
+     occupant's keys inside its padded region.
+  3. Decode steps append at per-slot offsets (``decode_attention`` with a
+     per-row index vector); positions beyond a slot's current length are
+     never attended (the validity mask is per-row) and are overwritten in
+     the same step they would first become visible.
+  4. ``SlotAllocator.free`` returns the slot; the next occupant's prefill
+     overwrites the row.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class SlotAllocator:
+    """Host-side free-list of decode slots.
+
+    Tracks which request owns which slot so leaks are detectable: the
+    scheduler asserts ``num_active == 0`` once the queue drains, and the
+    hypothesis invariant tests drive random alloc/free orders against it.
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots <= 0:
+            raise ValueError(f"num_slots must be positive, got {num_slots}")
+        self.num_slots = num_slots
+        # pop() takes from the tail; reversed init hands out 0, 1, 2, ...
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._owner: Dict[int, Hashable] = {}
+
+    def alloc(self, owner: Hashable) -> Optional[int]:
+        """Claim a free slot for ``owner``; None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._owner[slot] = owner
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise ValueError(f"slot {slot} is not allocated")
+        del self._owner[slot]
+        self._free.append(slot)
+
+    def owner(self, slot: int) -> Hashable:
+        return self._owner[slot]
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._owner)
+
+    def active_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+
+def check_slot_compatible(cfg: ModelConfig) -> None:
+    """Continuous batching currently covers attention-only decoders.
+
+    SSM / hybrid states integrate every prefill position (a right-padded
+    prompt would fold pad tokens into the state), and encoder / vision
+    prefixes need per-request side inputs the slot cache does not carry
+    yet; reject those up front instead of serving wrong tokens.
+    """
+    if cfg.block_type != "attn":
+        raise NotImplementedError(
+            f"continuous batching supports attention-only decoders; "
+            f"{cfg.name} has block_type={cfg.block_type!r} (SSM state "
+            "would absorb the prompt padding)")
+    if cfg.encoder_layers or cfg.vision_tokens:
+        raise NotImplementedError(
+            f"continuous batching does not carry encoder/vision prefix "
+            f"inputs yet ({cfg.name})")
+
+
+def init_slot_cache(cfg: ModelConfig, num_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Slot-indexed KV cache: ``lm.init_cache`` with batch = slots."""
+    check_slot_compatible(cfg)
+    return lm.init_cache(cfg, num_slots, max_len, dtype=dtype)
+
+
+def write_prefill(slot_cache: Dict[str, jax.Array],
+                  prefill_cache: Dict[str, jax.Array],
+                  slot: jax.Array, length: jax.Array
+                  ) -> Dict[str, jax.Array]:
+    """Masked scatter of one request's padded prefill KV into its slot row.
+
+    ``prefill_cache`` holds (L, 1, P, kv, hd) arrays from a prompt
+    right-padded to the fixed pad length P; positions >= ``length`` are
+    zeroed before the write so the padded tail of the row is clean.
+    ``slot`` and ``length`` are traced scalars — one compiled scatter
+    serves every admission regardless of which slot refills.
+    """
+    out = dict(slot_cache)
+    for key in ("k", "v"):
+        blk = prefill_cache[key]                       # (L, 1, P, kv, hd)
+        pos = jnp.arange(blk.shape[2], dtype=jnp.int32)
+        blk = jnp.where(pos[None, None, :, None, None] < length, blk,
+                        0).astype(out[key].dtype)
+        out[key] = jax.lax.dynamic_update_slice(
+            out[key], blk, (0, slot, 0, 0, 0))
+    return out

@@ -37,6 +37,40 @@ def test_pim_matmul_kernel_block_shapes(bm, bn, bk):
     assert jnp.array_equal(out, pim_matmul_ref(a, w))
 
 
+@pytest.mark.parametrize("m,k,n,with_bias", [
+    (100, 300, 70, False),     # ragged
+    (100, 300, 70, True),
+    (128, 512, 128, False),    # tile-exact
+    (1, 16, 1, True),          # degenerate
+])
+def test_fused_epilogue_lane_padding_parity(m, k, n, with_bias):
+    """The (SUBLANE, LANE) register-tile scale layout (compiled-Mosaic
+    clean) is bit-identical to the legacy width-1 BlockSpec path and to
+    the whole-array reference, for ragged and tile-exact shapes."""
+    from repro.kernels.pim_matmul.pim_matmul import pim_matmul_fused_pallas
+    from repro.kernels.pim_matmul.ref import pim_matmul_fused_ref
+    key = jax.random.PRNGKey(m + n)
+    a = jax.random.randint(key, (2, m, k), -15, 16, dtype=jnp.int8)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (2, k, n), -15, 16,
+                           dtype=jnp.int8)
+    a_s = jax.random.uniform(jax.random.fold_in(key, 2), (m, 1),
+                             minval=0.01, maxval=1.0)
+    w_s = jax.random.uniform(jax.random.fold_in(key, 3), (1, n),
+                             minval=0.01, maxval=1.0)
+    bias = jax.random.normal(jax.random.fold_in(key, 4), (1, n)) \
+        if with_bias else None
+    padded = pim_matmul_fused_pallas(a, w, a_s, w_s, bias, interpret=True)
+    legacy = pim_matmul_fused_pallas(a, w, a_s, w_s, bias, interpret=True,
+                                     lane_pad=False)
+    assert jnp.array_equal(padded, legacy), \
+        "lane padding must not change the epilogue arithmetic"
+    if not with_bias:
+        # fused bias is an FMA (1 ulp vs the two-step ref); the no-bias
+        # epilogue is bit-exact against the whole-array reference
+        assert jnp.array_equal(padded,
+                               pim_matmul_fused_ref(a, w, a_s, w_s))
+
+
 @pytest.mark.parametrize("bh,l,p,n,q", [
     (2, 128, 16, 8, 32),
     (1, 64, 8, 128, 64),
