@@ -162,6 +162,14 @@ def pim_plan_bench() -> List[Row]:
     return plan_execute_bench()
 
 
+def pim_substrate_sweep() -> List[Row]:
+    """Serve-shaped matmul across every execution substrate, incl. the
+    analog-jnp vs analog-pallas wall-clock/peak-memory gap (see
+    benchmarks/pim_plan_bench.py)."""
+    from benchmarks.pim_plan_bench import substrate_sweep_bench
+    return substrate_sweep_bench()
+
+
 def serving_bench() -> List[Row]:
     """Static vs continuous batching tokens/s on a mixed-length arrival
     trace (see benchmarks/serving_bench.py)."""
@@ -172,5 +180,6 @@ def serving_bench() -> List[Row]:
 ALL_BENCHMARKS = [
     fig2_cell_dse, fig7_grouping, fig8_power, fig9_latency,
     fig10_photonic_latency, fig11_epb, fig12_fpsw, table2_quantization,
-    adc_ablation, kernel_bench, pim_plan_bench, serving_bench,
+    adc_ablation, kernel_bench, pim_plan_bench, pim_substrate_sweep,
+    serving_bench,
 ]

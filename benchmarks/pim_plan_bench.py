@@ -1,8 +1,8 @@
-"""Plan-once / execute-many micro-benchmark for the weight-stationary
-PIM engine.
+"""Plan-once / execute-many and substrate-sweep micro-benchmarks for the
+weight-stationary PIM engine.
 
-Measures repeated decode-shaped matmuls (small M, LM-projection K x N) in
-two regimes:
+``plan_execute_bench`` measures repeated decode-shaped matmuls (small M,
+LM-projection K x N) in two regimes:
 
   * ``replan_per_call`` — the pre-refactor behaviour: quantize + nibble-
     decompose + pad the weights inside every call (weights "move" every
@@ -11,14 +11,23 @@ two regimes:
     and drive activations past the stationary planes each step.
 
 Both run the identical exact datapath, so the delta is pure weight-plane
-conversion overhead. CPU wall clock — relative numbers only.
+conversion overhead.
+
+``substrate_sweep_bench`` drives one serve-shaped matmul (prefill-chunk M,
+LM-projection K x N) through every registered execution substrate and
+additionally reports the analog-jnp vs analog-pallas speedup and
+peak-temp-memory delta: the jnp ``analog`` route materializes the whole
+(planes, chunks, M, N) chunk-sum tensor, the fused kernel keeps the
+readout chain in per-tile scratch.
+
+CPU wall clock — relative numbers only.
 
   PYTHONPATH=src python benchmarks/pim_plan_bench.py
 """
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 
@@ -26,16 +35,31 @@ Row = Tuple[str, float, str]
 
 # decode step of a reduced LM projection: batch rows x (d_model, d_ff)
 DECODE_M, DECODE_K, DECODE_N = 8, 512, 1024
+# serve-shaped (prefill-chunk) matmul for the substrate sweep: the shape
+# class where the analog jnp route's HBM intermediate actually hurts
+SWEEP_M, SWEEP_K, SWEEP_N = 64, 1024, 1024
+SWEEP_SUBSTRATES = ("exact-pallas", "exact-jnp", "analog", "analog-pallas")
 WARMUP, ITERS = 2, 20
 
 
-def _time(fn, *args) -> float:
+def _time(fn, *args, iters: int = ITERS) -> float:
     for _ in range(WARMUP):
         fn(*args).block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(ITERS):
+    for _ in range(iters):
         fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / ITERS * 1e6
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _peak_temp_bytes(fn, *args) -> Optional[float]:
+    """XLA's compiled temp-allocation size — the buffer-footprint lens on
+    'no intermediate touches HBM'. None when the backend exposes no
+    memory analysis."""
+    try:
+        mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return float(mem.temp_size_in_bytes)
+    except Exception:
+        return None
 
 
 def plan_execute_bench() -> List[Row]:
@@ -63,9 +87,41 @@ def plan_execute_bench() -> List[Row]:
     return rows
 
 
+def substrate_sweep_bench() -> List[Row]:
+    from repro import engine
+    rows: List[Row] = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (SWEEP_M, SWEEP_K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (SWEEP_K, SWEEP_N))
+    times, mems = {}, {}
+    for sub in SWEEP_SUBSTRATES:
+        cfg = engine.PimConfig(weight_bits=4, act_bits=4, substrate=sub)
+        plan = engine.program(w, cfg)
+        f = jax.jit(lambda a, p=plan: engine.matmul(a, p))
+        # the analog jnp route is slow enough that fewer iters suffice
+        times[sub] = _time(f, x, iters=5 if "analog" in sub else ITERS)
+        mems[sub] = _peak_temp_bytes(lambda a, p=plan: engine.matmul(a, p),
+                                     x)
+        rows.append((f"pim_substrate.{sub}.us_per_call", times[sub],
+                     f"serve-shaped {SWEEP_M}x{SWEEP_K}x{SWEEP_N} w4a4"))
+        if mems[sub] is not None:
+            rows.append((f"pim_substrate.{sub}.peak_temp_mib",
+                         mems[sub] / 2**20, "XLA temp allocation"))
+    rows.append(("pim_substrate.analog_pallas_speedup",
+                 times["analog"] / times["analog-pallas"],
+                 ">1 expected: readout chain fused in VMEM tiles"))
+    if mems["analog"] is not None and mems["analog-pallas"] is not None:
+        rows.append((
+            "pim_substrate.analog_pallas_temp_mem_ratio",
+            mems["analog"] / max(mems["analog-pallas"], 1.0),
+            ">1 expected: no (planes,chunks,M,N) intermediate in HBM"))
+    return rows
+
+
 def main() -> None:
     print("name,value,derived")
     for name, value, derived in plan_execute_bench():
+        print(f"{name},{value:.6g},{derived}")
+    for name, value, derived in substrate_sweep_bench():
         print(f"{name},{value:.6g},{derived}")
 
 

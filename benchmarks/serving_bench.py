@@ -40,6 +40,8 @@ NUM_REQUESTS = 24
 # Large enough that a decode step outweighs the scheduler's per-step host
 # sync (the regime continuous batching exists for); small enough for CPU.
 D_MODEL, NUM_LAYERS = 256, 4
+# fused decode steps per host sync for the --sync-every comparison
+SYNC_EVERY = 4
 
 
 def _build(substrate: str):
@@ -134,7 +136,7 @@ def serving_bench(substrate: str) -> List[Row]:
 
     static_tps = static_tokens / t_static
     cont_tps = cont_tokens / t_cont
-    return [
+    rows = [
         ("serving.static.tokens_per_s", static_tps,
          f"{static_tokens} tokens, {static_steps} lock-step decode steps"),
         ("serving.continuous.tokens_per_s", cont_tps,
@@ -147,6 +149,52 @@ def serving_bench(substrate: str) -> List[Row]:
          "must be 1: slot refills do not retrace"),
         ("serving.continuous.ttft_steps_p90",
          res.metrics["ttft_steps_p90"], "queueing + prefill, steps"),
+    ]
+
+    rows += sync_every_bench()
+    return rows
+
+
+def sync_every_bench() -> List[Row]:
+    """Fused decode windows (``sync_every``) on a model small enough that
+    the per-decode-step host round-trip is a visible fraction of the step
+    — the regime the knob targets. Same trace -> same tokens (asserted);
+    only the host-sync cadence changes."""
+    from repro.configs.base import get_config
+    from repro.models.lm import init_lm
+    from repro.serving import ContinuousScheduler
+    cfg = get_config("qwen2.5-3b").reduced(num_layers=2, d_model=64,
+                                           vocab=256)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    requests = _trace(cfg.vocab_size)
+    prompt_pad = max(PROMPT_LENS)
+    max_len = prompt_pad + max(GEN_LENS)
+    base = ContinuousScheduler(params, cfg, num_slots=NUM_SLOTS,
+                               prompt_pad=prompt_pad, max_len=max_len)
+    fused = ContinuousScheduler(params, cfg, num_slots=NUM_SLOTS,
+                                prompt_pad=prompt_pad, max_len=max_len,
+                                sync_every=SYNC_EVERY)
+    base.run(requests)      # warm (compile)
+    fused.run(requests)
+    t0 = time.perf_counter()
+    res1 = base.run(requests)
+    t_base = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    resk = fused.run(requests)
+    t_sync = time.perf_counter() - t0
+    for rid, toks in res1.tokens_by_id().items():
+        np.testing.assert_array_equal(resk.tokens_by_id()[rid], toks)
+    base_tps = res1.metrics["generated_tokens"] / t_base
+    sync_tps = resk.metrics["generated_tokens"] / t_sync
+    return [
+        ("serving.small.sync_every1.tokens_per_s", base_tps,
+         f"{res1.metrics['host_syncs']} host syncs for "
+         f"{res1.metrics['decode_steps']} decode steps"),
+        (f"serving.small.sync_every{SYNC_EVERY}.tokens_per_s", sync_tps,
+         f"{resk.metrics['host_syncs']} host syncs for "
+         f"{resk.metrics['decode_steps']} decode steps; tokens identical"),
+        ("serving.sync_every_speedup", sync_tps / base_tps,
+         ">1 expected on small models: fewer host round-trips"),
     ]
 
 

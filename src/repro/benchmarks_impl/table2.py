@@ -79,9 +79,12 @@ def run_table2() -> List[Row]:
         a_pim = _acc(params, layers, xs, ys,
                      pim=PimConfig(weight_bits=4, act_bits=4,
                                    substrate="exact-pallas"))
+        # analog readout study on the fused-kernel fast path (the jnp
+        # "analog" oracle is its bit-identical slow twin)
         a_pim_analog = _acc(params, layers, xs, ys,
                             pim=PimConfig(weight_bits=4, act_bits=4,
-                                          substrate="analog", adc_bits=5),
+                                          substrate="analog-pallas",
+                                          adc_bits=5),
                             rng=jax.random.PRNGKey(9))
         rows += [
             (f"table2.{name}.acc_fp32", a_fp, ""),
@@ -120,7 +123,7 @@ def run_adc_ablation() -> List[Row]:
     for adc in (3, 4, 5, 6, 8):
         a = _acc(params, layers, xte, yte,
                  pim=PimConfig(weight_bits=4, act_bits=4,
-                               substrate="analog", adc_bits=adc),
+                               substrate="analog-pallas", adc_bits=adc),
                  rng=jax.random.PRNGKey(9))
         rows.append((f"adc_ablation.{name}.adc{adc}b", a,
                      f"vs exact {a - a_exact:+.3f}"))

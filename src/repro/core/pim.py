@@ -15,7 +15,9 @@ The paper's datapath, as reproduced here:
   1. Weights are *programmed once* into 'OPCM': :func:`prepare_weights`
      quantizes (per-output-channel symmetric), nibble-decomposes into 4-bit
      planes — one OPCM cell per nibble (§IV.C.4 TDM) — and pre-pads the
-     planes to the Pallas kernel's tile multiples. The result is a
+     planes to the Pallas kernel's tile multiples *and* to WDM-chunk
+     boundaries, so the exact and analog substrates all consume the same
+     stationary layout with no per-call weight re-pad. The result is a
      :class:`DensePlan` pytree; plane decomposition and padding happen at
      programming time, **not** per matmul call (the PIM property: weights
      stay stationary in the array, only activations move).
@@ -68,6 +70,7 @@ from repro.quant.quantize import QTensor, quantize
 EXACT_PALLAS = "exact-pallas"
 EXACT_JNP = "exact-jnp"
 ANALOG = "analog"
+ANALOG_PALLAS = "analog-pallas"
 EMULATE = "emulate"
 
 
@@ -77,9 +80,10 @@ class PimConfig:
 
     Route selection is by substrate name: ``substrate`` is one of the
     registry keys in :mod:`repro.engine.substrates` (``exact-pallas``,
-    ``exact-jnp``, ``analog``, ``emulate``). The historical boolean pair
-    (``analog`` + ``use_pallas``) is kept as a deprecated alias and is
-    resolved to a substrate name by :attr:`resolved_substrate`.
+    ``exact-jnp``, ``analog``, ``analog-pallas``, ``emulate``). The
+    historical boolean pair (``analog`` + ``use_pallas``) is kept as a
+    deprecated alias and is resolved to a substrate name by
+    :attr:`resolved_substrate`.
     """
     weight_bits: int = 4          # paper baseline: 4b (one cell per weight)
     act_bits: int = 4
@@ -286,6 +290,12 @@ def plan_from_qtensor(w_q: QTensor, cfg: PimConfig = DEFAULT_PIM
     planes = to_nibbles(w_q.values, w_q.bits)              # (Pw, K, N)
     _, bn, bk = kernel_tiles(1, k, n)
     pad_k, pad_n = (-k) % bk, (-n) % bn
+    # Also land K on a WDM-chunk boundary so the analog substrates consume
+    # the same pre-padded planes with no per-call re-pad (chunk boundaries
+    # are absolute, so trailing zeros are exact on every route; for the
+    # default chunk=8 this is always already satisfied when k >= bk).
+    chunk = min(cfg.wdm_chunk, k) if cfg.wdm_chunk > 0 else k
+    pad_k += (-(k + pad_k)) % chunk
     if pad_k or pad_n:
         planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
     padded_scale = jnp.pad(jnp.broadcast_to(w_q.scale, (1, n)),
@@ -392,6 +402,27 @@ def exact_jnp_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
     return out
 
 
+def _pad_act_planes(a_planes: jax.Array, plan: DensePlan) -> jax.Array:
+    """Pad dynamic activation planes out to the plan's pre-padded K — the
+    per-call half of the padding contract every kernel substrate shares
+    (the weight half happened once at programming time)."""
+    pad_k = plan.planes.shape[1] - plan.k
+    if pad_k:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_k)))
+    return a_planes
+
+
+def _pad_bias(bias: Optional[jax.Array], plan: DensePlan
+              ) -> Optional[jax.Array]:
+    """Broadcast + pad an (N,) bias to the plan's padded column count for
+    a kernel's fused epilogue."""
+    if bias is None:
+        return None
+    pad_n = plan.planes.shape[2] - plan.n
+    return jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
+                   ((0, 0), (0, pad_n)))
+
+
 def exact_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
                           bias: Optional[jax.Array] = None) -> jax.Array:
     """``exact-pallas`` substrate: the Pallas kernel with the fused dequant
@@ -399,83 +430,37 @@ def exact_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
     the int32 accumulator tile in VMEM)."""
     from repro.kernels.pim_matmul import ops as pim_ops
     a_q, a_planes = _quantize_activations(x2, cfg)
-    pad_k = plan.planes.shape[1] - plan.k
-    if pad_k:
-        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_k)))
-    bias_p = None
-    if bias is not None:
-        pad_n = plan.planes.shape[2] - plan.n
-        bias_p = jnp.pad(bias.astype(jnp.float32).reshape(1, -1),
-                         ((0, 0), (0, pad_n)))
-    return pim_ops.pim_matmul_fused(a_planes, plan.planes, a_q.scale,
-                                    plan.padded_scale, bias=bias_p,
+    return pim_ops.pim_matmul_fused(_pad_act_planes(a_planes, plan),
+                                    plan.planes, a_q.scale,
+                                    plan.padded_scale,
+                                    bias=_pad_bias(bias, plan),
                                     interpret=cfg.interpret)[:, :plan.n]
 
 
 # ---------------------------------------------------------------------------
 # Analog readout math
 # ---------------------------------------------------------------------------
-def _analog_plane_matmuls(a_planes: jax.Array, w_planes: jax.Array,
-                          cfg: PimConfig, cell_noise_sigma: float,
-                          rng: Optional[jax.Array]) -> jax.Array:
-    """Analog readout model for the plane products.
+# The readout-chain arithmetic itself (chunked photodetector sums ->
+# transmission noise -> shared auto-ranged ADC -> integer code accumulation
+# -> shift-and-add -> dequant epilogue) lives in
+# repro/kernels/analog_readout/: ``ref.py`` is the whole-array jnp oracle
+# the ``analog`` substrate runs, and the fused Pallas kernel behind
+# ``analog-pallas`` must match it bit-for-bit on the deterministic path.
+# Both substrates consume the same pre-padded plan layout the exact
+# kernels use (planes + padded_scale; K lands on WDM-chunk boundaries at
+# programming time), so there is no per-call weight re-pad on any route.
 
-    Physical chain per WDM chunk of K:
-      product per wavelength  p_k = a_k * w_k          (cell modulation)
-      + multiplicative read noise on |p_k|             (ΔT_s residual)
-      photodetector sums the chunk                     (in-waveguide interf.)
-      5-bit ADC digitizes the chunk sum                (aggregation unit)
-    Chunk sums are then accumulated digitally (SRAM accumulator).
+def _resolve_analog_sigma(cfg: PimConfig, rng: Optional[jax.Array]
+                          ) -> float:
+    """The transmission-noise sigma an analog substrate should model.
 
-    With ``rng=None`` (and no explicitly requested sigma — the caller
-    raises otherwise) the stochastic transmission noise is skipped and the
-    model reduces to the deterministic transfer (ADC quantization only) —
-    the serving path uses this so decode stays reproducible; pass a key
-    for the accuracy-study noise model.
-    """
-    pa, m, k = a_planes.shape
-    pw, _, n = w_planes.shape
-    chunk = min(cfg.wdm_chunk, k)
-    pad = (-k) % chunk
-    if pad:
-        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad)))
-        w_planes = jnp.pad(w_planes, ((0, 0), (0, pad), (0, 0)))
-    kc = (k + pad) // chunk
-    a_c = a_planes.reshape(pa, m, kc, chunk).astype(jnp.float32)
-    w_c = w_planes.reshape(pw, kc, chunk, n).astype(jnp.float32)
-    # chunk-local products summed by the photodetector:
-    chunk_sums = jnp.einsum("amcq,wcqn->awcmn", a_c, w_c)
-    if cell_noise_sigma > 0.0 and rng is not None:
-        # Multiplicative transmission noise enters per product; the summed
-        # noise power over a chunk scales with the RMS product magnitude.
-        prod_sq = jnp.einsum("amcq,wcqn->awcmn", a_c ** 2, w_c ** 2)
-        sigma = cell_noise_sigma * jnp.sqrt(prod_sq)
-        chunk_sums = chunk_sums + sigma * jax.random.normal(
-            rng, chunk_sums.shape, dtype=jnp.float32)
-    # 5-bit ADC with auto-ranged TIA gain: full-scale tracks the actual
-    # per-plane-pair signal envelope (calibrated transimpedance gain), the
-    # standard practice for analog-compute readout chains. ``adc_bits`` codes
-    # span [-full_scale, +full_scale].
-    full_scale = jnp.max(jnp.abs(chunk_sums), axis=(2, 3, 4), keepdims=True)
-    full_scale = jnp.maximum(jax.lax.stop_gradient(full_scale), 1e-6)
-    half_levels = float(2 ** (cfg.adc_bits - 1) - 1)
-    lsb = full_scale / half_levels
-    digitized = jnp.round(chunk_sums / lsb) * lsb
-    return jnp.sum(digitized, axis=2)  # digital accumulation over chunks
-
-
-def analog_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
-                    bias: Optional[jax.Array] = None,
-                    rng: Optional[jax.Array] = None) -> jax.Array:
-    """``analog`` substrate: physical-readout model (per-WDM-chunk
-    photodetector sums -> transmission noise -> ADC quantization -> digital
-    shift-and-add). Pure jnp; the accuracy-study mode."""
-    a_q, a_planes = _quantize_activations(x2, cfg)
-    w_planes = plan.planes[:, :plan.k, :plan.n]
+    An explicitly requested ``read_noise_sigma > 0`` without a key raises
+    (the noise must not silently vanish); with ``read_noise_sigma == 0``
+    the cell-DSE implied sigma applies when a key is given, and without a
+    key the model degrades — with a once-per-process warning — to the
+    deterministic ADC-only transfer the serving path relies on."""
     sigma = cfg.read_noise_sigma
     if sigma > 0.0 and rng is None:
-        # an explicitly requested noise level must not silently vanish;
-        # only the implied default degrades to the deterministic readout
         raise ValueError(
             "analog substrate with an explicit read_noise_sigma > 0 "
             "requires an rng key (pass rng=, or leave read_noise_sigma=0 "
@@ -490,18 +475,65 @@ def analog_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
                 "analog readout without an rng key models the "
                 "deterministic transfer only (ADC quantization, no "
                 "transmission noise); pass rng= for the noise study",
-                stacklevel=2)
+                stacklevel=3)
         sigma = _IMPLIED_READ_NOISE_SIGMA
-    partials = _analog_plane_matmuls(a_planes, w_planes, cfg, sigma, rng)
-    # float shift-and-add (values are no longer exact integers)
-    pa, pw = partials.shape[0], partials.shape[1]
-    sh = (16.0 ** jnp.arange(pa))[:, None] * (16.0 ** jnp.arange(pw))[None]
-    acc = jnp.tensordot(sh.astype(jnp.float32), partials,
-                        axes=[[0, 1], [0, 1]])
-    out = acc.astype(jnp.float32) * a_q.scale * plan.scale
+    return sigma
+
+
+def _analog_inputs(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                   rng: Optional[jax.Array]):
+    """Shared analog-substrate prep: dynamic activation quantization,
+    act-plane padding to the plan's stationary layout, the WDM chunk
+    length, and the resolved noise sigma."""
+    a_q, a_planes = _quantize_activations(x2, cfg)
+    # wdm_chunk <= 0 means "one chunk spans all of K" — same fallback the
+    # programming-time chunk padding uses
+    chunk = min(cfg.wdm_chunk, plan.k) if cfg.wdm_chunk > 0 else plan.k
+    return (a_q, _pad_act_planes(a_planes, plan), chunk,
+            _resolve_analog_sigma(cfg, rng))
+
+
+def analog_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                    bias: Optional[jax.Array] = None,
+                    rng: Optional[jax.Array] = None) -> jax.Array:
+    """``analog`` substrate: the whole-array jnp readout oracle — it
+    materializes the full (planes, chunks, M, N) chunk-sum tensor, which
+    makes it the slow-but-transparent accuracy-study twin of
+    ``analog-pallas``."""
+    from repro.kernels.analog_readout.ref import analog_readout_fused_ref
+    a_q, a_planes, chunk, sigma = _analog_inputs(x2, plan, cfg, rng)
+    out = analog_readout_fused_ref(
+        a_planes, plan.planes, a_q.scale, plan.padded_scale, chunk,
+        cfg.adc_bits, sigma=sigma if rng is not None else 0.0, rng=rng
+    )[:, :plan.n]
     if bias is not None:
         out = out + bias.astype(jnp.float32).reshape(1, -1)
     return out
+
+
+def analog_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
+                           bias: Optional[jax.Array] = None,
+                           rng: Optional[jax.Array] = None) -> jax.Array:
+    """``analog-pallas`` substrate: the fused Pallas analog-readout kernel
+    — chunked PD sums, optional threaded-key transmission noise, shared
+    auto-ranged ADC, integer code accumulation, and the recombination/
+    dequant epilogue all in VMEM tiles. Bit-identical to
+    :func:`analog_matmul2d` on the deterministic (``rng=None``) path;
+    statistically consistent under noise (different PRNG streams)."""
+    from repro.kernels.analog_readout import ops as analog_ops
+    a_q, a_planes, chunk, sigma = _analog_inputs(x2, plan, cfg, rng)
+    seed = None
+    if rng is not None:
+        # threaded key: the kernel folds grid coordinates into this seed
+        # per tile (vmap-safe — expert stacks batch it like any operand)
+        seed = jax.random.randint(rng, (), 0, jnp.iinfo(jnp.int32).max,
+                                  dtype=jnp.int32)
+    out = analog_ops.analog_matmul_fused(
+        a_planes, plan.planes, a_q.scale, plan.padded_scale, seed,
+        _pad_bias(bias, plan), chunk=chunk, adc_bits=cfg.adc_bits,
+        sigma=sigma if rng is not None else 0.0,
+        interpret=cfg.interpret)
+    return out[:, :plan.n]
 
 
 # ---------------------------------------------------------------------------

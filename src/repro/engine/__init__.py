@@ -17,8 +17,10 @@ shaped the same way:
 Substrates (string-keyed registry, :mod:`repro.engine.substrates`):
 ``exact-pallas`` (default; fused-epilogue Pallas kernel, bit-exact),
 ``exact-jnp`` (same math in jnp, bit-identical), ``analog``
-(photodetector/ADC readout model), ``emulate`` (weight-quantization-only
-float matmul). ``register_substrate`` admits new backends without touching
+(photodetector/ADC readout model, whole-array jnp), ``analog-pallas``
+(the same readout model fused into a Pallas kernel — the fast
+physically-faithful route), ``emulate`` (weight-quantization-only float
+matmul). ``register_substrate`` admits new backends without touching
 call sites.
 
 Plans (:mod:`repro.core.pim`): :class:`DensePlan` (projections),
@@ -33,10 +35,11 @@ from repro.core.pim import (DEFAULT_PIM, DensePlan, DepthwisePlan,
                             prepare_weights, reference_quantized_matmul)
 from repro.engine.api import matmul, program
 from repro.engine.persist import load_plans, save_plans
-from repro.engine.substrates import (AnalogSubstrate, EmulateSubstrate,
-                                     ExactJnpSubstrate, ExactPallasSubstrate,
-                                     Substrate, available_substrates,
-                                     get_substrate, register_substrate)
+from repro.engine.substrates import (AnalogPallasSubstrate, AnalogSubstrate,
+                                     EmulateSubstrate, ExactJnpSubstrate,
+                                     ExactPallasSubstrate, Substrate,
+                                     available_substrates, get_substrate,
+                                     register_substrate)
 
 __all__ = [
     "DEFAULT_PIM", "PimConfig",
@@ -47,6 +50,6 @@ __all__ = [
     "Substrate", "register_substrate", "get_substrate",
     "available_substrates",
     "ExactPallasSubstrate", "ExactJnpSubstrate", "AnalogSubstrate",
-    "EmulateSubstrate",
+    "AnalogPallasSubstrate", "EmulateSubstrate",
     "save_plans", "load_plans",
 ]

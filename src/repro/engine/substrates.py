@@ -19,7 +19,13 @@ Registered substrates:
                     1 ulp); the portable fallback / oracle twin.
   ``analog``        physical-readout model (per-WDM-chunk photodetector
                     sums, transmission noise, ADC quantization) — the
-                    accuracy-study mode.
+                    whole-array jnp oracle, slow but transparent.
+  ``analog-pallas`` the same readout model through the fused Pallas
+                    analog-readout kernel: the chain runs on VMEM tiles,
+                    no (planes, chunks, M, N) intermediate touches HBM.
+                    Bit-identical to ``analog`` with ``rng=None``;
+                    statistically consistent under noise. The
+                    physically-faithful mode that serves at speed.
   ``emulate``       weight-quantization-only float matmul (the historical
                     serve.py fake-quantize escape hatch, now first-class).
 
@@ -173,13 +179,27 @@ class ExactJnpSubstrate(Substrate):
 
 
 class AnalogSubstrate(Substrate):
-    """Physical-readout model: PD chunk sums + noise + ADC quantization."""
+    """Physical-readout model: PD chunk sums + noise + ADC quantization
+    (whole-array jnp oracle)."""
 
     name = pim.ANALOG
     is_exact = False
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
         return pim.analog_matmul2d(x2, plan, cfg, bias, rng)
+
+
+class AnalogPallasSubstrate(Substrate):
+    """The same physical-readout model through the fused Pallas kernel:
+    chunk sums, noise, ADC, code accumulation, and the dequant epilogue
+    stay in VMEM tiles. Plans are interchangeable with ``analog`` (same
+    programming); with ``rng=None`` the outputs are bit-identical."""
+
+    name = pim.ANALOG_PALLAS
+    is_exact = False
+
+    def _dense2d(self, x2, plan, cfg, bias, rng):
+        return pim.analog_pallas_matmul2d(x2, plan, cfg, bias, rng)
 
 
 class EmulateSubstrate(Substrate):
@@ -242,4 +262,5 @@ def available_substrates() -> Tuple[str, ...]:
 register_substrate(ExactPallasSubstrate())
 register_substrate(ExactJnpSubstrate())
 register_substrate(AnalogSubstrate())
+register_substrate(AnalogPallasSubstrate())
 register_substrate(EmulateSubstrate())

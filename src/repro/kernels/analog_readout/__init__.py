@@ -1,0 +1,10 @@
+"""Fused Pallas analog-readout kernel (the ``analog-pallas`` substrate).
+
+Layout mirrors ``pim_matmul``: ``analog_readout.py`` holds the Pallas
+kernels (auto-ranging + readout passes), ``ops.py`` the jit'd public
+wrapper, ``ref.py`` the whole-array jnp oracle that also serves as the
+``analog`` substrate's math.
+"""
+from repro.kernels.analog_readout.ops import analog_matmul_fused
+
+__all__ = ["analog_matmul_fused"]

@@ -1,0 +1,149 @@
+"""Pure-jnp oracle for the OPIMA analog readout chain.
+
+This module defines the *canonical arithmetic* of the photonic readout
+path (paper §IV.C.4):
+
+  1. chunk sums   — products accumulate optically inside one WDM chunk of
+                    the K axis (wavelength-specific photodetectors):
+                    ``s[c] = sum_q a[ck+q] * w[ck+q]`` per (act-plane,
+                    weight-plane) pair. Operands are nibble digits, so
+                    every chunk sum is a small exact integer in float32.
+  2. read noise   — optional multiplicative transmission noise (ΔT_s
+                    residual); summed noise power over a chunk scales
+                    with the RMS product magnitude.
+  3. ADC          — an ``adc_bits`` converter with auto-ranged TIA gain.
+                    The TDM scheme drives every nibble-plane pair through
+                    the *same* physical readout chain, so the full scale
+                    is calibrated once per array — shared across plane
+                    pairs: ``full_scale = max |chunk sum|`` over pairs,
+                    chunks, rows, and columns, and
+                    ``lsb = full_scale / (2^(adc_bits-1) - 1)``. The
+                    converter emits integer codes ``round(s / lsb)``.
+  4. digital acc  — the SRAM accumulator sums ADC *codes* over chunks and
+                    recombines plane pairs with shift-and-add
+                    (``sum_de 16^(d+e) * code_sum[d,e]``) — all exact
+                    small-integer arithmetic.
+  5. epilogue     — one ``lsb`` rescale (the TIA calibration applied
+                    once), then the standard dequantization
+                    ``(acc * a_scale) * w_scale (+ bias)``.
+
+Keeping steps 3–4 in integer code space is both the physically faithful
+model — the accumulator register holds converter codes, the shared-ADC
+calibration is applied once — and what makes the arithmetic bitwise
+reproducible across XLA graphs: every intermediate from the ADC to the
+recombined accumulator is an exact small integer, so no float-add chain
+exists for XLA's fast-math reassociation (or the kernel's K-tile order)
+to perturb. The fused Pallas kernel must match this oracle *bit for
+bit* on the deterministic (``rng=None``) path; the stochastic path is
+matched statistically (different PRNG streams).
+
+Chunk boundaries are absolute (multiples of ``chunk`` from K index 0),
+so zero-padding K on the right — whether to a chunk multiple here or to
+a kernel tile multiple in the Pallas wrapper — never moves a real
+product to a different photodetector and never changes the result:
+padded products are 0, padded chunk sums are 0, their ADC codes are 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def half_levels(adc_bits: int) -> float:
+    """Positive code range of a signed ``adc_bits`` converter."""
+    return float(2 ** (adc_bits - 1) - 1)
+
+
+def inv_half_levels(adc_bits: int) -> float:
+    """``1 / half_levels`` as a compile-time constant. The lsb is computed
+    as ``full_scale * inv_half_levels`` — an explicit multiply — because
+    XLA strength-reduces a division by a *constant* into a reciprocal
+    multiply in some graphs and not others, and the kernel/oracle parity
+    contract needs one deterministic op everywhere."""
+    return 1.0 / half_levels(adc_bits)
+
+
+def _chunk_sums_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray,
+                    chunk: int, sigma: float,
+                    rng: Optional[jax.Array]) -> jnp.ndarray:
+    """Noisy per-WDM-chunk photodetector sums.
+
+    a_planes: (Pa, M, K) int8; w_planes: (Pw, K, N) int8.
+    Returns (Pa, Pw, KC, M, N) float32 — the *materialized* intermediate
+    the Pallas kernel exists to avoid.
+    """
+    pa, m, k = a_planes.shape
+    pw, k2, n = w_planes.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    pad = (-k) % chunk
+    if pad:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad)))
+        w_planes = jnp.pad(w_planes, ((0, 0), (0, pad), (0, 0)))
+    kc = (k + pad) // chunk
+    a_c = a_planes.reshape(pa, m, kc, chunk).astype(jnp.float32)
+    w_c = w_planes.reshape(pw, kc, chunk, n).astype(jnp.float32)
+    chunk_sums = jnp.einsum("amcq,wcqn->awcmn", a_c, w_c)
+    if sigma > 0.0 and rng is not None:
+        # Multiplicative transmission noise enters per product; the summed
+        # noise power over a chunk scales with the RMS product magnitude.
+        prod_sq = jnp.einsum("amcq,wcqn->awcmn", a_c ** 2, w_c ** 2)
+        sigma_arr = sigma * jnp.sqrt(prod_sq)
+        chunk_sums = chunk_sums + sigma_arr * jax.random.normal(
+            rng, chunk_sums.shape, dtype=jnp.float32)
+    return chunk_sums
+
+
+def analog_fullscale_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray,
+                         chunk: int, sigma: float = 0.0,
+                         rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Shared ADC full scale: max |chunk sum| over plane pairs, chunks,
+    rows, and columns (the TDM converter chain is calibrated once per
+    array).
+
+    Returns a float32 scalar (unclamped — callers apply the 1e-6 floor).
+    The Pallas full-scale pass must match this bit-for-bit on the
+    deterministic path.
+    """
+    cs = _chunk_sums_ref(a_planes, w_planes, chunk, sigma, rng)
+    return jnp.max(jnp.abs(cs))
+
+
+def clamp_fullscale(fs: jnp.ndarray) -> jnp.ndarray:
+    """The canonical full-scale floor (all-zero drive must not divide by
+    zero); shared by the oracle and the kernel wrapper."""
+    return jnp.maximum(jax.lax.stop_gradient(fs), 1e-6)
+
+
+def analog_readout_fused_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray,
+                             a_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                             chunk: int, adc_bits: int,
+                             sigma: float = 0.0,
+                             rng: Optional[jax.Array] = None,
+                             bias: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
+    """Whole-array analog readout oracle: chunk sums -> noise -> ADC codes
+    -> exact integer code accumulation and shift-and-add -> one lsb
+    rescale -> dequant epilogue.
+
+    a_scale: (M, 1) per-row act scales; w_scale: (1, N) per-col weight
+    scales; bias: optional (1, N). Returns (M, N) float32.
+    """
+    pa, pw = a_planes.shape[0], w_planes.shape[0]
+    cs = _chunk_sums_ref(a_planes, w_planes, chunk, sigma, rng)
+    fs = clamp_fullscale(jnp.max(jnp.abs(cs)))
+    lsb = fs * inv_half_levels(adc_bits)
+    codes = jnp.round(cs / lsb).astype(jnp.int32)  # converter codes
+    code_sums = jnp.sum(codes, axis=2)             # (Pa, Pw, M, N) int32
+    # Shift-and-add recombination in code space: int32 arithmetic is
+    # exact, so the result is bitwise order-independent by construction;
+    # the only rounding left is the single int32 -> f32 conversion below.
+    shifts = (16 ** jnp.arange(pa, dtype=jnp.int32))[:, None] * \
+             (16 ** jnp.arange(pw, dtype=jnp.int32))[None, :]
+    acc = jnp.tensordot(shifts, code_sums, axes=[[0, 1], [0, 1]],
+                        preferred_element_type=jnp.int32)
+    out = (acc.astype(jnp.float32) * lsb) * a_scale * w_scale  # one rescale
+    if bias is not None:
+        out = out + bias
+    return out

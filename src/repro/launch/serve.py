@@ -27,9 +27,13 @@ selected by substrate name, one of :func:`repro.engine.available_substrates`:
                                  epilogue in the Pallas kernel (default)
   --pim-substrate exact-jnp      same math in plain jnp (bit-identical on
                                  this path — serving fuses no bias)
-  --pim-substrate analog         photodetector/ADC readout model
-                                 (deterministic: no stochastic read noise
-                                 during serving)
+  --pim-substrate analog         photodetector/ADC readout model in whole-
+                                 array jnp (deterministic: no stochastic
+                                 read noise during serving)
+  --pim-substrate analog-pallas  the same readout model through the fused
+                                 Pallas analog-readout kernel — the
+                                 physically-faithful mode at serving
+                                 speed (bit-identical to analog here)
   --pim-substrate emulate        weight-quantization-only float matmul
                                  (the historical --pim-emulate behaviour,
                                  now a first-class substrate)
@@ -435,6 +439,7 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                      plan_dir: Optional[str] = None,
                      arrival_rate: float = 0.5,
                      trace_file: Optional[str] = None, seed: int = 0,
+                     sync_every: int = 1,
                      metrics_json: Optional[str] = None) -> Dict[str, Any]:
     """Continuous-batching serve: requests with heterogeneous arrival
     times and prompt/generation lengths stream through a fixed pool of
@@ -470,7 +475,8 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
             vocab=cfg.vocab_size, seed=seed)
         prompt_pad, max_len = prompt_len, prompt_len + gen
     sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
-                                prompt_pad=prompt_pad, max_len=max_len)
+                                prompt_pad=prompt_pad, max_len=max_len,
+                                sync_every=sync_every)
     sched.warmup()   # keep first-call compile out of the metered run
     run = sched.run(requests)
 
@@ -535,6 +541,11 @@ def main() -> None:
     ap.add_argument("--trace-file", default=None,
                     help="JSON arrival trace instead of synthetic "
                          "Poisson traffic (continuous mode)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="fused decode steps per host sync (continuous "
+                         "mode): >1 batches k steps on-device between "
+                         "token syncs when no admission/retirement can "
+                         "intervene; tokens are identical to 1")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-json", default=None,
                     help="write the structured run metrics to this path")
@@ -548,11 +559,14 @@ def main() -> None:
             pim_emulate=args.pim_emulate,
             pim_substrate=args.pim_substrate, plan_dir=args.plan_dir,
             arrival_rate=args.arrival_rate, trace_file=args.trace_file,
-            seed=args.seed, metrics_json=args.metrics_json)
+            seed=args.seed, sync_every=args.sync_every,
+            metrics_json=args.metrics_json)
         print(f"[serve] continuous: {res['num_requests']} requests through "
               f"{res['num_slots']} slots, {res['decode_steps']} decode "
-              f"steps, {res['prefills']} prefills "
-              f"(traces: {res['prefill_traces']}/{res['decode_traces']})")
+              f"steps in {res['host_syncs']} host syncs "
+              f"(sync_every={res['sync_every']}), {res['prefills']} "
+              f"prefills (traces: {res['prefill_traces']}/"
+              f"{res['decode_traces']})")
         print(f"[serve] {res['generated_tokens']} tokens, "
               f"{res['tokens_per_s']:.1f} tok/s wall, "
               f"occupancy {res['mean_slot_occupancy']:.2f}")

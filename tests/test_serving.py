@@ -124,6 +124,51 @@ _PARAMS_CACHE = {}
 _SCHED_CACHE = {}
 
 
+@pytest.mark.parametrize("sync_every", [2, 4])
+def test_sync_every_token_equality(sync_every):
+    """Fused multi-step decode windows (sync_every > 1) produce exactly
+    the tokens and latency accounting of single-step decoding — only the
+    host-sync cadence changes (fewer syncs than decode steps on a burst),
+    and the step functions stay compile-once per shape."""
+    cfg = _small_cfg()
+    params = _PARAMS_CACHE.setdefault(
+        "plain", init_lm(cfg, jax.random.PRNGKey(0)))
+    # burst + mixed lengths: exercises full windows, ragged tails, and
+    # admission interleaving
+    reqs = poisson_trace(n=10, rate=0.0, prompt_lens=[2, 5, 8, 12],
+                         gen_lens=[1, 3, 8, 13], vocab=cfg.vocab_size,
+                         seed=11)
+    reqs += poisson_trace(n=4, rate=0.5, prompt_lens=[3, 6],
+                          gen_lens=[4, 9], vocab=cfg.vocab_size, seed=12)
+    for i, r in enumerate(reqs):
+        r.request_id = i
+    base = ContinuousScheduler(params, cfg, num_slots=3, prompt_pad=12,
+                               max_len=25)
+    fused = ContinuousScheduler(params, cfg, num_slots=3, prompt_pad=12,
+                                max_len=25, sync_every=sync_every)
+    r0, r1 = base.run(reqs), fused.run(reqs)
+    t0, t1 = r0.tokens_by_id(), r1.tokens_by_id()
+    for rid in t0:
+        np.testing.assert_array_equal(t0[rid], t1[rid])
+    assert r1.metrics["decode_steps"] == r0.metrics["decode_steps"]
+    assert r1.metrics["host_syncs"] < r0.metrics["host_syncs"]
+    assert r1.metrics["sync_every"] == sync_every
+    for k in r0.metrics:
+        if "ttft" in k or "latency" in k:
+            assert r0.metrics[k] == r1.metrics[k], k
+    # one single-step trace + one window trace, regardless of traffic
+    assert fused.decode_traces <= 2
+
+
+def test_sync_every_validation():
+    cfg = _small_cfg()
+    params = _PARAMS_CACHE.setdefault(
+        "plain", init_lm(cfg, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="sync_every"):
+        ContinuousScheduler(params, cfg, num_slots=2, prompt_pad=8,
+                            max_len=16, sync_every=0)
+
+
 def test_scheduler_latency_accounting():
     """TTFT/latency bookkeeping: a request that arrives late cannot be
     admitted before it arrives, and metrics cover every completion."""
