@@ -18,7 +18,16 @@ LM-projection K x N) through every registered execution substrate and
 additionally reports the analog-jnp vs analog-pallas speedup and
 peak-temp-memory delta: the jnp ``analog`` route materializes the whole
 (planes, chunks, M, N) chunk-sum tensor, the fused kernel keeps the
-readout chain in per-tile scratch.
+readout chain in per-tile scratch. It also *asserts* the analog-readout
+chunk-sum transient stays under 2 MiB per plane pair (the sub-blocked
+fold — see ``repro.kernels.analog_readout``).
+
+``mesh_sweep_bench`` splits the same serve-shaped plan column- and
+row-wise over a 1/2/4-device mesh (``engine.shard_plan``) and checks the
+sharded outputs bit-identical to single-device. On CPU the devices are
+XLA host-platform virtuals sharing one machine, so wall clock is NOT
+expected to drop with tp; the per-device stationary-work columns/rows
+show the division of labour that scales on real hardware.
 
 CPU wall clock — relative numbers only.
 
@@ -26,10 +35,19 @@ CPU wall clock — relative numbers only.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Optional, Tuple
 
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # the mesh sweep needs virtual devices; harmless for the other benches
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        " --xla_force_host_platform_device_count=4").strip()
+
 import jax
+import numpy as np
 
 Row = Tuple[str, float, str]
 
@@ -114,6 +132,67 @@ def substrate_sweep_bench() -> List[Row]:
             "pim_substrate.analog_pallas_temp_mem_ratio",
             mems["analog"] / max(mems["analog-pallas"], 1.0),
             ">1 expected: no (planes,chunks,M,N) intermediate in HBM"))
+    # chunk-sum transient budget: the readout kernel folds the chunk axis
+    # in sub-blocks, so the live per-plane-pair tile must stay under
+    # 2 MiB at the serve-shaped default (whole-tile folding was 8 MiB)
+    from repro.kernels.analog_readout.analog_readout import \
+        chunk_transient_bytes
+    transient = chunk_transient_bytes()
+    assert transient < 2 * 2**20, (
+        f"analog-readout chunk-sum transient {transient / 2**20:.2f} MiB "
+        "exceeds the 2 MiB per-plane-pair budget — was the chunk-axis "
+        "sub-blocking (DEFAULT_CHUNK_BLOCK) widened?")
+    if mems["analog-pallas"] is not None:
+        # whole-pipeline guard: an unblocked fold would put the 8 MiB
+        # tile (per pair) back into the compiled temp allocation
+        temp_mib = mems["analog-pallas"] / 2**20
+        assert mems["analog-pallas"] < 8 * 2**20, (
+            f"analog-pallas compiled temp {temp_mib:.2f} MiB at "
+            f"{SWEEP_M}x{SWEEP_K}x{SWEEP_N} — chunk-sum transient "
+            "regression?")
+    rows.append(("pim_substrate.analog_pallas.chunk_transient_mib",
+                 transient / 2**20,
+                 "live per-plane-pair chunk-sum tile; asserted < 2 MiB"))
+    return rows
+
+
+MESH_TPS = (1, 2, 4)
+
+
+def mesh_sweep_bench() -> List[Row]:
+    from repro import engine
+    from jax.sharding import Mesh
+    rows: List[Row] = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (SWEEP_M, SWEEP_K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (SWEEP_K, SWEEP_N))
+    cfg = engine.PimConfig(weight_bits=4, act_bits=4,
+                           substrate="exact-pallas")
+    base = engine.program(w, cfg)
+    f = jax.jit(lambda a, p: engine.matmul(a, p))
+    ref = np.asarray(f(x, base))
+    ndev = len(jax.devices())
+    for tp in MESH_TPS:
+        if tp > ndev:
+            rows.append((f"pim_mesh.tp{tp}.skipped", 1.0,
+                         f"only {ndev} devices visible"))
+            continue
+        mesh = Mesh(np.asarray(jax.devices()[:tp]), ("model",))
+        for kind in ("col", "row"):
+            plan = engine.shard_plan(base, mesh, kind) if tp > 1 else base
+            t = _time(lambda a, p=plan: f(a, p), x)
+            eq = np.array_equal(ref, np.asarray(f(x, plan)))
+            assert eq, f"sharded {kind} tp={tp} not bit-identical"
+            work = (SWEEP_N if kind == "col" else SWEEP_K) // tp
+            unit = "cols" if kind == "col" else "rows"
+            rows += [
+                (f"pim_mesh.{kind}.tp{tp}.us_per_call", t,
+                 f"{SWEEP_M}x{SWEEP_K}x{SWEEP_N} w4a4; virtual CPU "
+                 "devices share one core — wall clock is flat by design"),
+                (f"pim_mesh.{kind}.tp{tp}.stationary_{unit}_per_device",
+                 float(work), f"per-device share of the {unit} axis"),
+                (f"pim_mesh.{kind}.tp{tp}.bitident_vs_single", float(eq),
+                 "must be 1: exact substrates shard losslessly"),
+            ]
     return rows
 
 
@@ -122,6 +201,8 @@ def main() -> None:
     for name, value, derived in plan_execute_bench():
         print(f"{name},{value:.6g},{derived}")
     for name, value, derived in substrate_sweep_bench():
+        print(f"{name},{value:.6g},{derived}")
+    for name, value, derived in mesh_sweep_bench():
         print(f"{name},{value:.6g},{derived}")
 
 

@@ -5,14 +5,78 @@ Prints ``name,value,derived`` CSV. Usage:
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig9 fig11 # substring filter
   PYTHONPATH=src python -m benchmarks.run pim_plan   # planned-weight bench
+
+``--json PATH`` runs the engine + serving benchmark set (plan-once /
+substrate sweep / device-mesh sweep from :mod:`benchmarks.pim_plan_bench`
+plus the static-vs-continuous serving comparison from
+:mod:`benchmarks.serving_bench`) and writes one JSON object keyed by
+benchmark name, each entry carrying whichever of ``tokens_per_s``,
+``wall_ms``, ``peak_temp_mib`` the benchmark measures (plus raw ``value``
+for ratios/counters). The mesh sweep needs virtual devices, so XLA_FLAGS
+is forced *before* any benchmark module imports jax.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 
+def _rows_to_json(rows):
+    """Fold (name, value, derived) rows into the BENCH schema: group by
+    the name minus its metric suffix; map known suffixes onto the
+    tokens/s / wall-clock / temp-memory fields."""
+    out = {}
+    for name, value, derived in rows:
+        base, _, metric = name.rpartition(".")
+        entry = out.setdefault(base or name, {})
+        if metric == "us_per_call":
+            entry["wall_ms"] = value / 1e3
+        elif metric == "tokens_per_s":
+            entry["tokens_per_s"] = value
+        elif metric.endswith("_mib") or metric == "peak_temp_mib":
+            entry[metric if metric != "peak_temp_mib"
+                  else "peak_temp_mib"] = value
+        else:
+            entry[metric or "value"] = value
+        entry.setdefault("notes", derived)
+    return out
+
+
+def run_json(path: str) -> None:
+    # XLA_FLAGS must be in place before jax initializes its backends —
+    # benchmark modules import jax at module scope, so set it first
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            " --xla_force_host_platform_device_count=4").strip()
+    import json
+    from benchmarks import pim_plan_bench, serving_bench
+    sections = {}
+    t0 = time.time()
+    sections["pim_plan"] = _rows_to_json(
+        pim_plan_bench.plan_execute_bench())
+    sections["pim_substrate"] = _rows_to_json(
+        pim_plan_bench.substrate_sweep_bench())
+    sections["mesh_sweep"] = _rows_to_json(
+        pim_plan_bench.mesh_sweep_bench())
+    sections["serving"] = _rows_to_json(
+        serving_bench.serving_bench("exact-jnp"))
+    sections["meta"] = {
+        "devices": len(__import__("jax").devices()),
+        "wall_s_total": time.time() - t0,
+    }
+    with open(path, "w") as f:
+        json.dump(sections, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} in {sections['meta']['wall_s_total']:.1f}s")
+
+
 def main() -> None:
+    if "--json" in sys.argv:
+        run_json(sys.argv[sys.argv.index("--json") + 1])
+        return
     from benchmarks.paper_figs import ALL_BENCHMARKS
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     print("name,value,derived")

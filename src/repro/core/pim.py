@@ -190,6 +190,8 @@ class DensePlan(Plan):
     k: int = 0                   # logical contraction dim (planes[:, :k])
     n: int = 0                   # logical output dim (planes[..., :n])
     cfg: PimConfig = DEFAULT_PIM  # operating point the plan was built for
+    shard: Optional[object] = None  # PlanShard (engine/mesh.py) when the
+                                    # plan is split over a device mesh
 
     @property
     def shape(self):
@@ -198,14 +200,14 @@ class DensePlan(Plan):
     # pytree plumbing -----------------------------------------------------
     def tree_flatten(self):
         return ((self.values, self.scale, self.planes, self.padded_scale),
-                (self.bits, self.k, self.n, self.cfg))
+                (self.bits, self.k, self.n, self.cfg, self.shard))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         values, scale, planes, padded_scale = children
         return cls(values=values, scale=scale, planes=planes,
                    padded_scale=padded_scale, bits=aux[0], k=aux[1],
-                   n=aux[2], cfg=aux[3])
+                   n=aux[2], cfg=aux[3], shard=aux[4])
 
 
 @jax.tree_util.register_pytree_node_class
@@ -245,6 +247,7 @@ class ExpertStackedPlan(Plan):
 
     dense: DensePlan             # leaves stacked over a leading expert axis
     num_experts: int = 0
+    shard: Optional[object] = None  # PlanShard: expert-parallel placement
 
     @property
     def cfg(self) -> PimConfig:  # type: ignore[override]
@@ -262,11 +265,11 @@ class ExpertStackedPlan(Plan):
         return (self.num_experts, self.dense.k, self.dense.n)
 
     def tree_flatten(self):
-        return ((self.dense,), (self.num_experts,))
+        return ((self.dense,), (self.num_experts, self.shard))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(dense=children[0], num_experts=aux[0])
+        return cls(dense=children[0], num_experts=aux[0], shard=aux[1])
 
 
 # Backward-compatible names (pre-engine API).

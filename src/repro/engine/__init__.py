@@ -34,6 +34,8 @@ from repro.core.pim import (DEFAULT_PIM, DensePlan, DepthwisePlan,
                             prepare_depthwise_weights, prepare_expert_weights,
                             prepare_weights, reference_quantized_matmul)
 from repro.engine.api import matmul, program
+from repro.engine.mesh import (PlanShard, replicate, shard_plan,
+                               shard_plan_tree)
 from repro.engine.persist import load_plans, save_plans
 from repro.engine.substrates import (AnalogPallasSubstrate, AnalogSubstrate,
                                      EmulateSubstrate, ExactJnpSubstrate,
@@ -52,4 +54,5 @@ __all__ = [
     "ExactPallasSubstrate", "ExactJnpSubstrate", "AnalogSubstrate",
     "AnalogPallasSubstrate", "EmulateSubstrate",
     "save_plans", "load_plans",
+    "PlanShard", "shard_plan", "shard_plan_tree", "replicate",
 ]

@@ -23,7 +23,10 @@ _PROGRAM_KINDS = ("dense", "depthwise", "experts")
 
 
 def program(w: jax.Array, cfg: pim.PimConfig = pim.DEFAULT_PIM, *,
-            kind: str = "dense", substrate: Optional[str] = None) -> pim.Plan:
+            kind: str = "dense", substrate: Optional[str] = None,
+            mesh: Optional["jax.sharding.Mesh"] = None,
+            spec: Optional[str] = None,
+            mesh_axis: str = "model") -> pim.Plan:
     """Program weights into a stationary plan on a named substrate.
 
     Args:
@@ -33,19 +36,35 @@ def program(w: jax.Array, cfg: pim.PimConfig = pim.DEFAULT_PIM, *,
         unless ``substrate`` overrides it.
       kind: which plan family to build.
       substrate: optional registry key overriding ``cfg``'s substrate.
+      mesh: optional :class:`jax.sharding.Mesh` to split the plan over —
+        the sharding is stamped into the plan (like the substrate), so
+        ``matmul`` needs no flags. See :mod:`repro.engine.mesh`.
+      spec: split kind when ``mesh`` is given — one of ``"col"``,
+        ``"row"`` (dense) or ``"expert"`` (expert stacks); ``None``
+        defaults to ``"col"`` for dense plans and ``"expert"`` for
+        expert stacks.
+      mesh_axis: the mesh axis the stationary dimension splits over.
 
     Returns:
-      A :class:`~repro.core.pim.Plan` carrying the substrate-stamped config.
+      A :class:`~repro.core.pim.Plan` carrying the substrate-stamped
+      config (and, with ``mesh``, the stamped :class:`PlanShard`).
     """
     sub = get_substrate(substrate or cfg.resolved_substrate)
     if kind == "dense":
-        return sub.program(w, cfg)
-    if kind == "depthwise":
-        return sub.program_depthwise(w, cfg)
-    if kind == "experts":
-        return sub.program_experts(w, cfg)
-    raise ValueError(f"unknown plan kind {kind!r}; expected one of "
-                     f"{_PROGRAM_KINDS}")
+        plan = sub.program(w, cfg)
+    elif kind == "depthwise":
+        plan = sub.program_depthwise(w, cfg)
+    elif kind == "experts":
+        plan = sub.program_experts(w, cfg)
+    else:
+        raise ValueError(f"unknown plan kind {kind!r}; expected one of "
+                         f"{_PROGRAM_KINDS}")
+    if mesh is not None:
+        from repro.engine import mesh as mesh_mod
+        plan = mesh_mod.shard_plan(plan, mesh, spec, axis=mesh_axis)
+    elif spec is not None:
+        raise ValueError("spec= requires mesh=")
+    return plan
 
 
 def matmul(x: jax.Array, plan: pim.Plan, *,

@@ -48,14 +48,20 @@ def _cfg_spec(cfg: pim.PimConfig) -> Dict[str, Any]:
 def describe_plan_tree(tree: Any) -> Dict[str, Any]:
     """Recursively describe a tree of plans/arrays as JSON-able spec."""
     if isinstance(tree, pim.ExpertStackedPlan):
-        return {"kind": "expert-plan", "num_experts": tree.num_experts,
-                "dense": describe_plan_tree(tree.dense)}
+        out = {"kind": "expert-plan", "num_experts": tree.num_experts,
+               "dense": describe_plan_tree(tree.dense)}
+        if tree.shard is not None:
+            out["shard"] = {"kind": tree.shard.kind, "axis": tree.shard.axis}
+        return out
     if isinstance(tree, pim.DensePlan):
-        return {"kind": "dense-plan", "bits": tree.bits, "k": tree.k,
-                "n": tree.n, "cfg": _cfg_spec(tree.cfg),
-                "leaves": [_leaf_spec(l) for l in
-                           (tree.values, tree.scale, tree.planes,
-                            tree.padded_scale)]}
+        out = {"kind": "dense-plan", "bits": tree.bits, "k": tree.k,
+               "n": tree.n, "cfg": _cfg_spec(tree.cfg),
+               "leaves": [_leaf_spec(l) for l in
+                          (tree.values, tree.scale, tree.planes,
+                           tree.padded_scale)]}
+        if tree.shard is not None:
+            out["shard"] = {"kind": tree.shard.kind, "axis": tree.shard.axis}
+        return out
     if isinstance(tree, pim.DepthwisePlan):
         return {"kind": "depthwise-plan", "bits": tree.bits,
                 "cfg": _cfg_spec(tree.cfg),
@@ -122,14 +128,44 @@ def save_plans(directory: str, plans: Any, step: int = 0,
     return ckpt.save_checkpoint(directory, step, plans, extras=all_extras)
 
 
-def load_plans(directory: str, step: Optional[int] = None
-               ) -> Tuple[Any, int, Dict[str, Any]]:
+def _replace_on_mesh(tree: Any, spec: Dict[str, Any], mesh) -> Any:
+    """Re-place a restored plan tree over ``mesh`` per the saved spec.
+
+    Plans whose spec recorded a shard are re-stamped and device_put with
+    the same split (the geometry transforms — column trim, row padding —
+    are idempotent, so re-sharding an already-trimmed/padded plan is pure
+    placement); everything else is replicated."""
+    from repro.engine import mesh as mesh_mod
+    kind = spec["kind"]
+    if kind in ("dense-plan", "expert-plan"):
+        shard = spec.get("shard")
+        if shard is not None:
+            return mesh_mod.shard_plan(tree, mesh, shard["kind"],
+                                       axis=shard["axis"])
+        return mesh_mod.replicate(tree, mesh)
+    if kind == "dict":
+        return {k: _replace_on_mesh(tree[k], v, mesh)
+                for k, v in spec["items"].items()}
+    if kind in ("list", "tuple"):
+        items = [_replace_on_mesh(t, v, mesh)
+                 for t, v in zip(tree, spec["items"])]
+        return items if kind == "list" else tuple(items)
+    # depthwise-plan / leaf: replicate as-is
+    return mesh_mod.replicate(tree, mesh)
+
+
+def load_plans(directory: str, step: Optional[int] = None, *,
+               mesh=None) -> Tuple[Any, int, Dict[str, Any]]:
     """Restore a plan tree saved by :func:`save_plans`.
 
     Returns ``(plans, step, extras)`` with :data:`PLANS_EXTRAS_KEY`
-    stripped from ``extras``. Raises FileNotFoundError when no checkpoint
-    exists and ValueError when the checkpoint was not written by
-    :func:`save_plans`."""
+    stripped from ``extras``. With ``mesh=`` the restored tree is
+    re-placed over the device mesh: plans saved with a shard stamp get
+    the same split back (see :mod:`repro.engine.mesh`), everything else
+    is replicated — so a serve restart on a mesh needs no re-programming
+    *and* no re-sharding pass. Raises FileNotFoundError when no
+    checkpoint exists and ValueError when the checkpoint was not written
+    by :func:`save_plans`."""
     if step is None:
         step = ckpt.latest_step(directory)
         if step is None:
@@ -146,5 +182,7 @@ def load_plans(directory: str, step: Optional[int] = None
     template = build_plan_template(spec)
     plans, step, extras = ckpt.restore_checkpoint(directory, template,
                                                   step=step)
+    if mesh is not None:
+        plans = _replace_on_mesh(plans, spec, mesh)
     extras = {k: v for k, v in extras.items() if k != PLANS_EXTRAS_KEY}
     return plans, step, extras

@@ -105,6 +105,13 @@ class Substrate:
             # guard every entry, not just api.matmul; the float-only
             # emulate route legitimately runs wider-than-8-bit operands
             pim._check_widths(cfg)
+        if getattr(plan, "shard", None) is not None:
+            # mesh-stamped plan: the split executor wraps the same
+            # per-substrate math in a shard_map + collective epilogue
+            from repro.engine import mesh as mesh_mod
+            return mesh_mod.sharded_matmul(self, x, plan, cfg=cfg,
+                                           bias=bias, rng=rng,
+                                           paired=paired)
         if isinstance(plan, pim.ExpertStackedPlan):
             return self._experts(x, plan, cfg, bias, rng, paired)
         if paired:

@@ -54,12 +54,34 @@ DEFAULT_BM = 128
 DEFAULT_BN = 256
 # Default tiles are tuned for the interpret path (an XLA while-loop over
 # grid steps, where step count dominates wall clock): (128, 256, 512)
-# minimizes steps across decode- and prefill-shaped problems. The readout
-# body holds a transient (KC, bm, bn) chunk-sum tile per plane pair
-# (bk=512, chunk=8 -> 64*128*256*4 B = 8 MiB) — fine for the interpreter,
-# oversized for a real 16 MiB-VMEM core, where callers should shrink bk
-# (bk=128 -> 2 MiB) or a future revision should sub-block the chunk axis.
+# minimizes steps across decode- and prefill-shaped problems.
 DEFAULT_BK = 512
+# The kernel bodies fold over the chunk axis in sub-blocks of
+# ``chunk_block`` WDM chunks, so the live chunk-sum transient per plane
+# pair is (chunk_block, bm, bn) f32 — not (KC, bm, bn). At the defaults
+# (bk=512, chunk=8 -> KC=64) an unblocked tile would be
+# 64*128*256*4 B = 8 MiB, oversized for a real 16 MiB-VMEM core; with
+# chunk_block=8 it is 1 MiB. Max- and int32-code accumulation are both
+# associative, so sub-blocking is bit-identical to the whole-tile fold.
+DEFAULT_CHUNK_BLOCK = 8
+
+
+def chunk_transient_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                          chunk_block: int = DEFAULT_CHUNK_BLOCK) -> int:
+    """Size of the live per-plane-pair chunk-sum transient — the tile
+    the deterministic readout path materializes at once (noise runs draw
+    a full per-tile normal tensor on top; that path trades VMEM for
+    two-pass bit-agreement)."""
+    return chunk_block * bm * bn * 4
+
+
+def _chunk_block_for(kc: int, chunk_block: int) -> int:
+    """Largest divisor of ``kc`` not exceeding the requested block (the
+    fori_loop needs equal-size sub-blocks)."""
+    cb = max(1, min(chunk_block, kc))
+    while kc % cb:
+        cb -= 1
+    return cb
 
 
 def analog_tiles(m: int, k: int, n: int, chunk: int,
@@ -85,33 +107,41 @@ def _tile_noise(seed, npairs: int, kc: int, bm: int, bn: int) -> jax.Array:
     return jax.random.normal(key, (npairs, kc, bm, bn), jnp.float32)
 
 
-def _pair_chunk_sums(a_ref, w_ref, d: int, e: int, *, chunk: int, kc: int,
-                     sigma: float, noise) -> jax.Array:
-    """Noisy chunk sums for one (act-plane, weight-plane) pair on one
-    (bm, bk) x (bk, bn) tile. Returns (kc, bm, bn) float32 — exact small
+def _pair_chunk_sums(a_ref, w_ref, d: int, e: int, c0, *, chunk: int,
+                     cb: int, sigma: float, noise) -> jax.Array:
+    """Noisy chunk sums for one (act-plane, weight-plane) pair over the
+    ``cb`` WDM chunks starting at chunk index ``c0`` of one
+    (bm, bk) x (bk, bn) tile. Returns (cb, bm, bn) float32 — exact small
     integers plus (optionally) the transmission-noise term. Shared by
     both kernels so the auto-range pass sees exactly the signal the
-    readout pass digitizes."""
+    readout pass digitizes; ``noise`` is the pair's full (kc, bm, bn)
+    draw, sliced here so sub-blocking never changes which normal lands on
+    which chunk."""
     a_t = a_ref[d].astype(jnp.float32)            # (bm, bk)
     w_t = w_ref[e].astype(jnp.float32)            # (bk, bn)
     bm, bn = a_t.shape[0], w_t.shape[1]
-    a_c = a_t.reshape(bm, kc, chunk).transpose(1, 0, 2)   # (kc, bm, chunk)
-    w_c = w_t.reshape(kc, chunk, bn)                      # (kc, chunk, bn)
+    a_t = jax.lax.dynamic_slice_in_dim(a_t, c0 * chunk, cb * chunk, axis=1)
+    w_t = jax.lax.dynamic_slice_in_dim(w_t, c0 * chunk, cb * chunk, axis=0)
+    a_c = a_t.reshape(bm, cb, chunk).transpose(1, 0, 2)   # (cb, bm, chunk)
+    w_c = w_t.reshape(cb, chunk, bn)                      # (cb, chunk, bn)
     dims = (((2,), (1,)), ((0,), (0,)))
     sums = jax.lax.dot_general(a_c, w_c, dims,
                                preferred_element_type=jnp.float32)
     if sigma > 0.0:
+        noise_blk = jax.lax.dynamic_slice_in_dim(noise, c0, cb, axis=0)
         prod_sq = jax.lax.dot_general(a_c * a_c, w_c * w_c, dims,
                                       preferred_element_type=jnp.float32)
-        sums = sums + sigma * jnp.sqrt(prod_sq) * noise
+        sums = sums + sigma * jnp.sqrt(prod_sq) * noise_blk
     return sums
 
 
-def _fullscale_kernel(*refs, chunk: int, kc: int, pa: int, pw: int,
-                      sigma: float, has_noise: bool):
+def _fullscale_kernel(*refs, chunk: int, kc: int, cb: int, pa: int,
+                      pw: int, sigma: float, has_noise: bool):
     """Auto-ranging pass: running max |chunk sum| over every plane pair
     and grid step, accumulated into one (SUBLANE, LANE) block (the scalar
-    is broadcast across the block so no width-1 writes are needed)."""
+    is broadcast across the block so no width-1 writes are needed). The
+    chunk axis is folded ``cb`` chunks at a time — max is associative, so
+    the blocked fold is bit-identical to a whole-tile reduction."""
     if has_noise:
         a_ref, w_ref, seed_ref, o_ref = refs
     else:
@@ -126,20 +156,23 @@ def _fullscale_kernel(*refs, chunk: int, kc: int, pa: int, pw: int,
     noise = (_tile_noise(seed_ref[0], pa * pw, kc,
                          a_ref.shape[1], w_ref.shape[2])
              if has_noise else None)
-    tile_max = None
+    tile_max = jnp.float32(0.0)
     for d in range(pa):
         for e in range(pw):
-            sums = _pair_chunk_sums(
-                a_ref, w_ref, d, e, chunk=chunk, kc=kc, sigma=sigma,
-                noise=noise[d * pw + e] if has_noise else None)
-            pair_max = jnp.max(jnp.abs(sums))
-            tile_max = pair_max if tile_max is None else \
-                jnp.maximum(tile_max, pair_max)
+            pair_noise = noise[d * pw + e] if has_noise else None
+
+            def blk(i, cur, d=d, e=e, pair_noise=pair_noise):
+                sums = _pair_chunk_sums(
+                    a_ref, w_ref, d, e, i * cb, chunk=chunk, cb=cb,
+                    sigma=sigma, noise=pair_noise)
+                return jnp.maximum(cur, jnp.max(jnp.abs(sums)))
+
+            tile_max = jax.lax.fori_loop(0, kc // cb, blk, tile_max)
     o_ref[...] = jnp.maximum(o_ref[...],
                              jnp.full(o_ref.shape, tile_max))
 
 
-def _readout_kernel(*refs, chunk: int, kc: int, pa: int, pw: int,
+def _readout_kernel(*refs, chunk: int, kc: int, cb: int, pa: int, pw: int,
                     sigma: float, has_noise: bool, has_bias: bool,
                     n_k: int):
     """Readout pass: shift-weighted ADC codes accumulated in int32 across
@@ -168,15 +201,26 @@ def _readout_kernel(*refs, chunk: int, kc: int, pa: int, pw: int,
     acc = acc_ref[...]
     for d in range(pa):
         for e in range(pw):
-            sums = _pair_chunk_sums(
-                a_ref, w_ref, d, e, chunk=chunk, kc=kc, sigma=sigma,
-                noise=noise[d * pw + e] if has_noise else None)
-            # shared auto-ranged ADC: |sums| <= full_scale by construction
-            # so codes are in [-half_levels, half_levels] — no clamp; the
-            # digital accumulator sums shift-weighted codes in int32
-            # (exact — neither K-tile order nor fast-math can perturb it)
-            codes = jnp.round(sums / lsb_ref[0]).astype(jnp.int32)
-            acc = acc + jnp.sum(codes, axis=0) * (16 ** (d + e))
+            pair_noise = noise[d * pw + e] if has_noise else None
+
+            def blk(i, cur, d=d, e=e, pair_noise=pair_noise):
+                # live transient is one (cb, bm, bn) sub-block, not the
+                # full (kc, bm, bn) tile — see chunk_transient_bytes
+                sums = _pair_chunk_sums(
+                    a_ref, w_ref, d, e, i * cb, chunk=chunk, cb=cb,
+                    sigma=sigma, noise=pair_noise)
+                # shared auto-ranged ADC: |sums| <= full_scale by
+                # construction so codes are in [-half_levels,
+                # half_levels] — no clamp; the digital accumulator sums
+                # shift-weighted codes in int32 (exact — neither K-tile
+                # order nor fast-math can perturb it)
+                codes = jnp.round(sums / lsb_ref[0]).astype(jnp.int32)
+                return cur + jnp.sum(codes, axis=0)
+
+            pair_codes = jax.lax.fori_loop(
+                0, kc // cb, blk,
+                jnp.zeros(acc.shape, jnp.int32))
+            acc = acc + pair_codes * (16 ** (d + e))
     acc_ref[...] = acc
 
     @pl.when(k_step == n_k - 1)
@@ -215,12 +259,13 @@ def _pad_operands(a_planes, w_planes, a_scale, w_scale, bias, bm, bn, bk):
 
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "sigma", "bm", "bn", "bk",
-                                    "interpret"))
+                                    "chunk_block", "interpret"))
 def analog_fullscale_pallas(a_planes: jax.Array, w_planes: jax.Array,
                             seed: Optional[jax.Array] = None,
                             *, chunk: int, sigma: float = 0.0,
                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                             bk: int = DEFAULT_BK,
+                            chunk_block: int = DEFAULT_CHUNK_BLOCK,
                             interpret: bool = False) -> jax.Array:
     """Auto-ranging pass: the shared ADC full scale.
 
@@ -255,8 +300,10 @@ def analog_fullscale_pallas(a_planes: jax.Array, w_planes: jax.Array,
         in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
         inputs.append(jnp.asarray(seed, jnp.int32).reshape((1,)))
 
+    kc = bk // chunk
     out = pl.pallas_call(
-        functools.partial(_fullscale_kernel, chunk=chunk, kc=bk // chunk,
+        functools.partial(_fullscale_kernel, chunk=chunk, kc=kc,
+                          cb=_chunk_block_for(kc, chunk_block),
                           pa=pa, pw=pw, sigma=sigma if has_noise else 0.0,
                           has_noise=has_noise),
         grid=(mp // bm, np_ // bn, n_k),
@@ -271,7 +318,7 @@ def analog_fullscale_pallas(a_planes: jax.Array, w_planes: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "sigma", "bm", "bn", "bk",
-                                    "interpret"))
+                                    "chunk_block", "interpret"))
 def analog_readout_pallas(a_planes: jax.Array, w_planes: jax.Array,
                           a_scale: jax.Array, w_scale: jax.Array,
                           lsb: jax.Array,
@@ -280,6 +327,7 @@ def analog_readout_pallas(a_planes: jax.Array, w_planes: jax.Array,
                           *, chunk: int, sigma: float = 0.0,
                           bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                           bk: int = DEFAULT_BK,
+                          chunk_block: int = DEFAULT_CHUNK_BLOCK,
                           interpret: bool = False) -> jax.Array:
     """Readout pass: fused chunk sums -> noise -> ADC -> integer code
     accumulation -> shift-and-add -> dequant epilogue.
@@ -331,8 +379,10 @@ def analog_readout_pallas(a_planes: jax.Array, w_planes: jax.Array,
         in_specs.append(ws_spec)
         inputs.append(jnp.pad(bias, ((0, SUBLANE - 1), (0, 0))))
 
+    kc = bk // chunk
     out = pl.pallas_call(
-        functools.partial(_readout_kernel, chunk=chunk, kc=bk // chunk,
+        functools.partial(_readout_kernel, chunk=chunk, kc=kc,
+                          cb=_chunk_block_for(kc, chunk_block),
                           pa=pa, pw=pw, sigma=sigma if has_noise else 0.0,
                           has_noise=has_noise, has_bias=has_bias, n_k=n_k),
         grid=(mp // bm, np_ // bn, n_k),

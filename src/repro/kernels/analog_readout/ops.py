@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.analog_readout.analog_readout import (
-    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, analog_fullscale_pallas,
-    analog_readout_pallas)
+    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, DEFAULT_CHUNK_BLOCK,
+    analog_fullscale_pallas, analog_readout_pallas, chunk_transient_bytes)
 from repro.kernels.analog_readout.ref import (analog_fullscale_ref,
                                               analog_readout_fused_ref,
                                               clamp_fullscale,
@@ -27,14 +27,17 @@ from repro.kernels.analog_readout.ref import (analog_fullscale_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "adc_bits", "sigma", "bm",
-                                    "bn", "bk", "interpret", "use_ref"))
+                                    "bn", "bk", "chunk_block", "interpret",
+                                    "use_ref"))
 def analog_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
                         a_scale: jax.Array, w_scale: jax.Array,
                         seed: Optional[jax.Array] = None,
                         bias: Optional[jax.Array] = None,
                         *, chunk: int, adc_bits: int, sigma: float = 0.0,
                         bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-                        bk: int = DEFAULT_BK, interpret: bool = True,
+                        bk: int = DEFAULT_BK,
+                        chunk_block: int = DEFAULT_CHUNK_BLOCK,
+                        interpret: bool = True,
                         use_ref: bool = False) -> jax.Array:
     """Nibble planes + scales -> (M, N) float32 through the full analog
     readout chain (chunked PD sums, optional transmission noise, ADC,
@@ -66,7 +69,7 @@ def analog_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
         a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_c)))
         w_planes = jnp.pad(w_planes, ((0, 0), (0, pad_c), (0, 0)))
     kw = dict(chunk=chunk, sigma=sigma if has_noise else 0.0, bm=bm,
-              bn=bn, bk=bk, interpret=interpret)
+              bn=bn, bk=bk, chunk_block=chunk_block, interpret=interpret)
     fs = analog_fullscale_pallas(a_planes, w_planes, seed, **kw)
     lsb = clamp_fullscale(fs) * inv_half_levels(adc_bits)
     return analog_readout_pallas(a_planes, w_planes, a_scale, w_scale,
@@ -75,4 +78,4 @@ def analog_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
 
 __all__ = ["analog_matmul_fused", "analog_fullscale_pallas",
            "analog_readout_pallas", "analog_fullscale_ref",
-           "analog_readout_fused_ref"]
+           "analog_readout_fused_ref", "chunk_transient_bytes"]

@@ -23,3 +23,29 @@ def make_local_mesh(model_axis: int = 1) -> Mesh:
     n = len(jax.devices())
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_serve_mesh(spec: str) -> Mesh:
+    """Build a ("data", "model") mesh from a serve-CLI ``"dp,tp"`` spec.
+
+    ``"2,2"`` → 2-way data parallel x 2-way tensor/expert parallel over
+    the first 4 devices. Uses an explicit device subset, so it works when
+    dp*tp is smaller than the device count (e.g. forced-host-device CPU
+    runs: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    import numpy as np
+    try:
+        dp, tp = (int(p) for p in spec.split(","))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'dp,tp' (two comma-separated ints), got "
+            f"{spec!r}") from None
+    if dp < 1 or tp < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got dp={dp}, tp={tp}")
+    devices = jax.devices()
+    if dp * tp > len(devices):
+        raise ValueError(
+            f"--mesh {spec!r} needs {dp * tp} devices but only "
+            f"{len(devices)} are visible; on CPU, force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={dp * tp}")
+    grid = np.asarray(devices[:dp * tp]).reshape(dp, tp)
+    return Mesh(grid, ("data", "model"))

@@ -221,17 +221,23 @@ def _params_digest(params) -> str:
 
 
 def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
-                plan_dir: Optional[str]):
+                plan_dir: Optional[str], mesh=None,
+                mesh_spec: Optional[str] = None):
     """Program (or restore) the PIM parameter tree.
 
     With ``plan_dir`` set, a previously saved plan checkpoint is restored
     — serving restarts skip re-programming — and a fresh programming run
     is persisted for the next boot. The checkpoint records the model
     identity/geometry alongside the PIM operating point; any mismatch
-    (different arch, reduced dims, substrate, or bit width) re-programs
-    instead of serving stale plans."""
+    (different arch, reduced dims, substrate, bit width, or mesh layout)
+    re-programs instead of serving stale plans. With ``mesh``, plans are
+    split over the device mesh (:func:`engine.shard_plan_tree`) and saved
+    shard stamps are re-placed on restore."""
     if not plan_dir:
-        return plan_params_for_pim(params, pim_cfg)
+        planned = plan_params_for_pim(params, pim_cfg)
+        if mesh is not None:
+            planned = engine.shard_plan_tree(planned, mesh)
+        return planned
     # the digest hashes every weight host-side, so only pay for it when a
     # plan checkpoint is actually in play
     want = {"substrate": pim_cfg.resolved_substrate,
@@ -241,9 +247,10 @@ def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
             "num_layers": cfg.num_layers,
             "d_model": cfg.d_model,
             "vocab_size": cfg.vocab_size,
+            "mesh": mesh_spec,
             "params_digest": _params_digest(params)}
     try:
-        planned, _, extras = engine.load_plans(plan_dir)
+        planned, _, extras = engine.load_plans(plan_dir, mesh=mesh)
     except FileNotFoundError:
         pass
     except Exception as e:  # noqa: BLE001 — any restore failure
@@ -263,6 +270,8 @@ def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
         print(f"[serve] plan checkpoint at {plan_dir} was programmed "
               f"for {got}, requested {want}; re-programming")
     planned = plan_params_for_pim(params, pim_cfg)
+    if mesh is not None:
+        planned = engine.shard_plan_tree(planned, mesh)
     try:
         engine.save_plans(plan_dir, planned, extras=want)
         print(f"[serve] saved programmed plans to {plan_dir}")
@@ -292,12 +301,45 @@ def _resolve_substrate(pim_substrate: Optional[str],
     return pim_substrate or "exact-pallas"
 
 
+def enable_compile_cache(cache_dir: str) -> None:
+    """Point jax's persistent compilation cache at ``cache_dir`` so serve
+    restarts reuse compiled executables instead of re-lowering every step
+    function. The size/compile-time floors are dropped to zero: serving
+    compiles few, hot programs, and on a restart even a small prefill
+    executable is worth a disk hit."""
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    try:
+        # the cache singleton initializes lazily at the first compile; if
+        # anything compiled before this call (imports do), it latched a
+        # no-dir cache and the config updates above are ignored — reset
+        # so the next compile re-initializes against cache_dir
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.reset_cache()
+    except (ImportError, AttributeError):
+        pass   # config flags above are still honored on first compile
+
+
 def _setup(arch: str, layers: Optional[int], d_model: Optional[int],
            pim: bool, pim_bits: int, pim_emulate: bool,
-           pim_substrate: Optional[str], plan_dir: Optional[str]):
+           pim_substrate: Optional[str], plan_dir: Optional[str],
+           mesh_spec: Optional[str] = None,
+           compile_cache_dir: Optional[str] = None):
     """Shared serve bring-up: config reduction, param init, and (with
     ``pim``) weight programming — identical for both serving modes, so
-    continuous mode streams past exactly the plans static mode uses."""
+    continuous mode streams past exactly the plans static mode uses.
+
+    ``mesh_spec`` ("dp,tp") builds a ("data", "model") device mesh and
+    splits the programmed plans over it (:mod:`repro.engine.mesh`):
+    column/row tensor-parallel for stacked projections, expert-parallel
+    for MoE stacks, with everything else replicated."""
+    if compile_cache_dir:
+        enable_compile_cache(compile_cache_dir)
+    mesh = None
+    if mesh_spec:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(mesh_spec)
     cfg = get_config(arch)
     if layers or d_model:
         cfg = cfg.reduced(num_layers=layers or 2, d_model=d_model or 64,
@@ -307,8 +349,11 @@ def _setup(arch: str, layers: Optional[int], d_model: Optional[int],
     pim_cfg = PimConfig(weight_bits=pim_bits, act_bits=pim_bits,
                         substrate=substrate)
     if pim:
-        params = _pim_params(params, cfg, pim_cfg, plan_dir)
-    return cfg, params, substrate, pim_cfg
+        params = _pim_params(params, cfg, pim_cfg, plan_dir, mesh=mesh,
+                             mesh_spec=mesh_spec or None)
+    elif mesh is not None:
+        params = engine.replicate(params, mesh)
+    return cfg, params, substrate, pim_cfg, mesh
 
 
 def write_metrics_json(path: str, result: Dict[str, Any]) -> None:
@@ -335,14 +380,17 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
           layers: Optional[int] = None, d_model: Optional[int] = None,
           pim: bool = False, pim_bits: int = 4, pim_emulate: bool = False,
           greedy: bool = True, pim_substrate: Optional[str] = None,
-          plan_dir: Optional[str] = None,
+          plan_dir: Optional[str] = None, mesh: Optional[str] = None,
+          compile_cache_dir: Optional[str] = None,
           metrics_json: Optional[str] = None) -> Dict[str, Any]:
     """Run one batched serve request; ``pim_substrate`` names the engine
     route (default ``exact-pallas``; ``pim_emulate=True`` is the
-    deprecated spelling of ``pim_substrate="emulate"``)."""
-    cfg, params, substrate, pim_cfg = _setup(
+    deprecated spelling of ``pim_substrate="emulate"``). ``mesh`` is a
+    "dp,tp" device-mesh spec — the programmed plans are split over the
+    mesh and the batch matmuls run tensor/expert-parallel."""
+    cfg, params, substrate, pim_cfg, _ = _setup(
         arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
-        plan_dir)
+        plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir)
 
     rng = np.random.default_rng(0)
     batch_in: Dict[str, Any] = {
@@ -439,7 +487,8 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                      plan_dir: Optional[str] = None,
                      arrival_rate: float = 0.5,
                      trace_file: Optional[str] = None, seed: int = 0,
-                     sync_every: int = 1,
+                     sync_every: int = 1, mesh: Optional[str] = None,
+                     compile_cache_dir: Optional[str] = None,
                      metrics_json: Optional[str] = None) -> Dict[str, Any]:
     """Continuous-batching serve: requests with heterogeneous arrival
     times and prompt/generation lengths stream through a fixed pool of
@@ -454,9 +503,9 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     ``prompt_len + gen`` long.
     """
     from repro.serving import ContinuousScheduler, poisson_trace
-    cfg, params, substrate, pim_cfg = _setup(
+    cfg, params, substrate, pim_cfg, dev_mesh = _setup(
         arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
-        plan_dir)
+        plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir)
     if trace_file:
         requests = _load_trace(trace_file, cfg.vocab_size, seed)
         if not requests:
@@ -476,12 +525,14 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
         prompt_pad, max_len = prompt_len, prompt_len + gen
     sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
                                 prompt_pad=prompt_pad, max_len=max_len,
-                                sync_every=sync_every)
+                                sync_every=sync_every, mesh=dev_mesh)
     sched.warmup()   # keep first-call compile out of the metered run
     run = sched.run(requests)
 
     result: Dict[str, Any] = dict(run.metrics)
     result["arch"] = cfg.name
+    if mesh:
+        result["mesh"] = mesh
     result["requests"] = [
         {"id": c.request_id, "prompt_len": int(c.prompt.shape[0]),
          "tokens": c.tokens, "arrival_step": c.arrival_step,
@@ -528,6 +579,15 @@ def main() -> None:
     ap.add_argument("--plan-dir", default=None,
                     help="persist/restore programmed plans here so "
                          "restarts skip re-programming")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="device mesh 'dp,tp': split programmed plans "
+                         "tensor/expert-parallel over the model axis and "
+                         "decode slots over the data axis (CPU: force "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persist jax's compilation cache here so serve "
+                         "restarts skip XLA re-compilation")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching: Poisson/trace arrivals "
                          "through the slot scheduler (repro/serving/)")
@@ -559,7 +619,8 @@ def main() -> None:
             pim_emulate=args.pim_emulate,
             pim_substrate=args.pim_substrate, plan_dir=args.plan_dir,
             arrival_rate=args.arrival_rate, trace_file=args.trace_file,
-            seed=args.seed, sync_every=args.sync_every,
+            seed=args.seed, sync_every=args.sync_every, mesh=args.mesh,
+            compile_cache_dir=args.compile_cache_dir,
             metrics_json=args.metrics_json)
         print(f"[serve] continuous: {res['num_requests']} requests through "
               f"{res['num_slots']} slots, {res['decode_steps']} decode "
@@ -579,7 +640,9 @@ def main() -> None:
         res = serve(args.arch, args.batch, args.prompt_len, args.gen,
                     args.layers, args.d_model, args.pim, args.pim_bits,
                     args.pim_emulate, pim_substrate=args.pim_substrate,
-                    plan_dir=args.plan_dir, metrics_json=args.metrics_json)
+                    plan_dir=args.plan_dir, mesh=args.mesh,
+                    compile_cache_dir=args.compile_cache_dir,
+                    metrics_json=args.metrics_json)
         print(f"[serve] prefill {res['prefill_s']*1e3:.1f}ms, "
               f"decode {res['decode_s_per_token']*1e3:.1f}ms/tok")
         print(f"[serve] tokens:\n{res['generated']}")

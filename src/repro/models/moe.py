@@ -124,6 +124,12 @@ def _moe_pim(x2: jax.Array, probs: jax.Array, ids: jax.Array,
     down-projection) and the router weights are applied at aggregation —
     no gather/scatter, matching how a programmed PIM array bank executes.
     x2: (T, D); probs/ids: (T, k). Returns (T, D).
+
+    Expert parallelism rides on the plans, not on this function: when the
+    stacks were programmed with a mesh (``engine.program(..., mesh=)`` or
+    ``engine.shard_plan_tree``), ``engine_matmul`` runs one expert slab
+    per device and all_gathers the (E, T, ·) result, so the combine below
+    is unchanged and bit-identical to the single-device route.
     """
     t = x2.shape[0]
     e = wi.num_experts

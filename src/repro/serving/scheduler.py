@@ -141,7 +141,8 @@ class ContinuousScheduler:
     def __init__(self, params, cfg: ModelConfig, num_slots: int,
                  prompt_pad: int, max_len: int,
                  max_prefills_per_step: int = 1,
-                 cache_dtype=jnp.bfloat16, sync_every: int = 1):
+                 cache_dtype=jnp.bfloat16, sync_every: int = 1,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         slots_mod.check_slot_compatible(cfg)
         if prompt_pad > max_len:
             raise ValueError(f"prompt_pad={prompt_pad} exceeds "
@@ -158,9 +159,56 @@ class ContinuousScheduler:
         self.max_prefills_per_step = max_prefills_per_step
         self.cache_dtype = cache_dtype
         self.sync_every = sync_every
+        # Device mesh: plans inside ``params`` carry their own sharding
+        # (engine.shard_plan_tree); the scheduler's job is placing the
+        # slot cache and per-step token/position vectors. Slots split
+        # over the data axes when the count divides (decode rows are
+        # independent, so the split is numerics-preserving); otherwise
+        # everything is replicated and the model axis still does the
+        # tensor-parallel work inside each matmul.
+        self.mesh = mesh
+        self._slot_spec = self._vec_spec = None
+        if mesh is not None:
+            from jax.sharding import PartitionSpec
+            dp_axes = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names)
+            dp = int(np.prod([mesh.shape[a] for a in dp_axes])) \
+                if dp_axes else 1
+            if dp > 1 and num_slots % dp == 0:
+                self._slot_spec = PartitionSpec(None, dp_axes)
+                self._vec_spec = PartitionSpec(dp_axes)
+            else:
+                self._slot_spec = PartitionSpec()
+                self._vec_spec = PartitionSpec()
         self.prefill_traces = 0
         self.decode_traces = 0
         self._build_step_fns()
+
+    # ------------------------------------------------------------------
+    def _place_cache(self, cache):
+        """Place slot-cache leaves on the mesh: slot axis (dim 1) over
+        the data axes, everything else replicated. No-op without a
+        mesh."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def put(leaf):
+            spec = (self._slot_spec
+                    if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots
+                    else PartitionSpec())
+            return jax.device_put(leaf, NamedSharding(self.mesh, spec))
+
+        return jax.tree_util.tree_map(put, cache)
+
+    def _place_vec(self, vec):
+        """Place a per-slot (S,) or (S, 1) host vector on the mesh."""
+        arr = jnp.asarray(vec)
+        if self.mesh is None:
+            return arr
+        from jax.sharding import NamedSharding
+        return jax.device_put(arr, NamedSharding(self.mesh,
+                                                 self._vec_spec))
 
     # ------------------------------------------------------------------
     def _build_step_fns(self) -> None:
@@ -213,19 +261,21 @@ class ContinuousScheduler:
         dummy admission + decode on a scratch cache. ``serve_continuous``
         calls this before its metered run so the dumped ``tokens_per_s``
         tracks scheduling, not first-call XLA compile time."""
-        cache = slots_mod.init_slot_cache(self.cfg, self.num_slots,
-                                          self.max_len, self.cache_dtype)
+        cache = self._place_cache(
+            slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                      self.max_len, self.cache_dtype))
         toks = jnp.zeros((1, self.prompt_pad), jnp.int32)
         tok0, cache = self._admit_fn(self.params, cache, toks,
                                      jnp.int32(1), jnp.int32(0))
-        tok_vec = jnp.zeros((self.num_slots, 1), jnp.int32)
-        pos_vec = jnp.zeros((self.num_slots,), jnp.int32)
+        tok_vec = self._place_vec(jnp.zeros((self.num_slots, 1), jnp.int32))
+        pos_vec = self._place_vec(jnp.zeros((self.num_slots,), jnp.int32))
         next_toks, cache = self._decode_fn(self.params, cache, tok_vec,
                                            pos_vec)
         if self._decode_window_fn is not None:
             toks_seq, cache = self._decode_window_fn(
-                self.params, cache, jnp.zeros((self.num_slots, 1),
-                                              jnp.int32), pos_vec)
+                self.params, cache,
+                self._place_vec(jnp.zeros((self.num_slots, 1), jnp.int32)),
+                pos_vec)
             jax.block_until_ready(toks_seq)
         jax.block_until_ready((tok0, next_toks))
 
@@ -264,8 +314,9 @@ class ContinuousScheduler:
         pending = deque(sorted(
             requests, key=lambda r: (r.arrival, str(r.request_id))))
         alloc = slots_mod.SlotAllocator(self.num_slots)
-        cache = slots_mod.init_slot_cache(self.cfg, self.num_slots,
-                                          self.max_len, self.cache_dtype)
+        cache = self._place_cache(
+            slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                      self.max_len, self.cache_dtype))
         ready: List[Request] = []
         active: Dict[int, _InFlight] = {}
         completions: List[Completion] = []
@@ -348,13 +399,13 @@ class ContinuousScheduler:
                     pos_vec[slot] = st.pos
                 if window > 1:
                     toks_seq, cache = self._decode_window_fn(
-                        self.params, cache, jnp.asarray(tok_vec),
-                        jnp.asarray(pos_vec))
+                        self.params, cache, self._place_vec(tok_vec),
+                        self._place_vec(pos_vec))
                     toks_seq = np.asarray(toks_seq)     # (window, S)
                 else:
                     next_toks, cache = self._decode_fn(
-                        self.params, cache, jnp.asarray(tok_vec),
-                        jnp.asarray(pos_vec))
+                        self.params, cache, self._place_vec(tok_vec),
+                        self._place_vec(pos_vec))
                     toks_seq = np.asarray(next_toks)[None]
                 host_syncs += 1
                 decode_steps += window
