@@ -169,7 +169,7 @@ def mesh_sweep_bench() -> List[Row]:
                            substrate="exact-pallas")
     base = engine.program(w, cfg)
     f = jax.jit(lambda a, p: engine.matmul(a, p))
-    ref = np.asarray(f(x, base))
+    ref = jax.device_get(f(x, base))
     ndev = len(jax.devices())
     for tp in MESH_TPS:
         if tp > ndev:
@@ -180,7 +180,7 @@ def mesh_sweep_bench() -> List[Row]:
         for kind in ("col", "row"):
             plan = engine.shard_plan(base, mesh, kind) if tp > 1 else base
             t = _time(lambda a, p=plan: f(a, p), x)
-            eq = np.array_equal(ref, np.asarray(f(x, plan)))
+            eq = np.array_equal(ref, jax.device_get(f(x, plan)))
             assert eq, f"sharded {kind} tp={tp} not bit-identical"
             work = (SWEEP_N if kind == "col" else SWEEP_K) // tp
             unit = "cols" if kind == "col" else "rows"

@@ -23,17 +23,24 @@ ap.add_argument("--substrate", default="exact-jnp",
                      "(exact-jnp is CPU-safe for CI)")
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--slots", type=int, default=3)
+ap.add_argument("--sanitize", action="store_true",
+                help="arm the runtime sanitizers: transfer guard around "
+                     "the steady-state decode window plus the "
+                     "compile-count sentinel (repro.analysis.sanitize)")
 args = ap.parse_args()
 
 res = serve_continuous(args.arch, num_slots=args.slots,
                        num_requests=args.requests, prompt_len=12, gen=8,
                        layers=2, d_model=64, pim=True,
                        pim_substrate=args.substrate, arrival_rate=0.5,
-                       seed=0)
+                       seed=0, sanitize=args.sanitize)
 
 print(f"arch={res['arch']} (reduced 2L/64d), substrate="
       f"{res['pim_substrate']}: {res['num_requests']} requests through "
       f"{res['num_slots']} slots")
+if args.sanitize:
+    print(f"  sanitize: transfer guard armed, compiles "
+          f"{res['sanitize']['compiles']}")
 print(f"  {res['prefills']} prefills interleaved with "
       f"{res['decode_steps']} decode steps "
       f"(compiled once: {res['prefill_traces']}/{res['decode_traces']} "

@@ -1,0 +1,399 @@
+"""Project-wide call graph over the repo's AST, and the *hot set*.
+
+The host-sync rules only make sense on the serving hot path, so the
+graph models how this codebase is actually wired: module functions,
+methods, nested step closures, ``self._fn = jax.jit(fn)`` aliases (the
+scheduler's step functions), function-valued arguments to the jax
+transforms (``jax.jit`` / ``vmap`` / ``lax.scan`` / ``shard_map`` /
+``functools.partial``), and package re-exports (``engine.matmul``
+resolves through ``repro/engine/__init__.py`` to
+``repro.engine.api.matmul``).
+
+The hot set is everything upstream *or* downstream of the roots: a
+benchmark aggregating engine outputs is as much on the hot path as the
+substrate math the engine dispatches to.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+DEFAULT_HOT_ROOTS: Tuple[str, ...] = (
+    "repro.models.lm.decode_step",
+    "repro.serving.scheduler.ContinuousScheduler.run",
+    "repro.engine.api.matmul",
+)
+
+# jax transforms whose function-valued arguments become call edges; the
+# value is the positions holding functions (None = first arg).
+_BODY_ARG_TRANSFORMS = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "checkpoint": (0,),
+    "partial": (0,), "grad": (0,), "value_and_grad": (0,),
+    "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "cond": (1, 2), "shard_map": (0,), "named_call": (0,),
+}
+_JIT_WRAPPERS = ("jit", "pjit")
+
+
+def attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` -> ["a", "b", "c"]; None for anything fancier."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str
+    module: str
+    node: ast.AST
+    class_qual: Optional[str] = None      # enclosing class, if a method
+    is_jit_target: bool = False
+
+
+class CallGraph:
+    def __init__(self) -> None:
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_node: Dict[int, str] = {}          # id(ast node) -> qual
+        self.edges: Dict[str, Set[str]] = {}
+        self.redges: Dict[str, Set[str]] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}
+        self.jit_self_aliases: Dict[str, Set[str]] = {}
+        self.self_aliases: Dict[str, Dict[str, str]] = {}
+
+    # -- construction ---------------------------------------------------
+    def add_function(self, info: FunctionInfo) -> None:
+        self.functions[info.qualname] = info
+        self.by_node[id(info.node)] = info.qualname
+
+    def add_edge(self, src: str, dst: str) -> None:
+        self.edges.setdefault(src, set()).add(dst)
+
+    def canonical(self, qual: str) -> str:
+        """Chase package re-exports: ``repro.engine.matmul`` ->
+        ``repro.engine.api.matmul`` when ``repro/engine/__init__`` binds
+        the name."""
+        for _ in range(8):
+            if qual in self.functions:
+                return qual
+            parts = qual.split(".")
+            rebound = None
+            for cut in range(len(parts) - 1, 0, -1):
+                mod = ".".join(parts[:cut])
+                binding = self.imports.get(mod, {}).get(parts[cut])
+                if binding is not None:
+                    rebound = ".".join([binding] + parts[cut + 1:])
+                    break
+            if rebound is None or rebound == qual:
+                return qual
+            qual = rebound
+        return qual
+
+    def finalize(self) -> None:
+        canon_edges: Dict[str, Set[str]] = {}
+        for src, dsts in self.edges.items():
+            canon_edges[src] = {self.canonical(d) for d in dsts}
+        self.edges = canon_edges
+        self.redges = {}
+        for src, dsts in self.edges.items():
+            for d in dsts:
+                self.redges.setdefault(d, set()).add(src)
+
+    # -- queries --------------------------------------------------------
+    def match(self, root: str) -> List[str]:
+        return [q for q in self.functions
+                if q == root or q.endswith("." + root)]
+
+    def hot_set(self, roots: Sequence[str]) -> frozenset:
+        seeds = [q for r in roots for q in self.match(r)]
+        hot: Set[str] = set(seeds)
+        for rel in (self.edges, self.redges):
+            frontier = deque(seeds)
+            seen = set(seeds)
+            while frontier:
+                cur = frontier.popleft()
+                for nxt in rel.get(cur, ()):
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        frontier.append(nxt)
+            hot |= seen
+        return frozenset(hot)
+
+    def is_jit_target(self, qual: str) -> bool:
+        info = self.functions.get(qual)
+        return bool(info and info.is_jit_target)
+
+
+def _import_map(tree: ast.Module, module: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    pkg = module.rsplit(".", 1)[0] if "." in module else ""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                parts = module.split(".")
+                base_parts = parts[:len(parts) - node.level]
+                if node.module:
+                    base_parts.append(node.module)
+                base = ".".join(base_parts)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{base}.{a.name}" if base \
+                    else a.name
+    if pkg:
+        pass  # absolute imports only in this repo; pkg kept for level>0
+    return out
+
+
+def _wrapped_calls(value: ast.AST) -> Iterable[ast.Call]:
+    """Call nodes inside an assignment value, looking through a
+    conditional expression (``jax.jit(f) if flag else None``)."""
+    if isinstance(value, ast.Call):
+        yield value
+    elif isinstance(value, ast.IfExp):
+        yield from _wrapped_calls(value.body)
+        yield from _wrapped_calls(value.orelse)
+
+
+class _ModuleScanner:
+    """Registers functions / methods / nested closures of one module and
+    records ``self.attr = [jax.jit](fn)`` aliases."""
+
+    def __init__(self, graph: CallGraph, module: str, tree: ast.Module):
+        self.graph = graph
+        self.module = module
+        self.tree = tree
+        self.graph.imports[module] = _import_map(tree, module)
+
+    def full_name(self, chain: List[str]) -> str:
+        """Expand the head of an attribute chain through the import map
+        (``lax.scan`` -> ``jax.lax.scan``)."""
+        head = self.graph.imports[self.module].get(chain[0], chain[0])
+        return ".".join([head] + chain[1:])
+
+    def scan(self) -> None:
+        self._walk_body(self.tree.body, scope=self.module, class_qual=None)
+
+    def _walk_body(self, body: Sequence[ast.stmt], scope: str,
+                   class_qual: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{scope}.{node.name}"
+                info = FunctionInfo(qualname=qual, module=self.module,
+                                    node=node, class_qual=class_qual)
+                info.is_jit_target = self._decorated_jit(node)
+                self.graph.add_function(info)
+                self._walk_body(node.body, scope=qual,
+                                class_qual=class_qual)
+            elif isinstance(node, ast.ClassDef):
+                cqual = f"{scope}.{node.name}"
+                self._walk_body(node.body, scope=cqual, class_qual=cqual)
+            else:
+                for sub in ast.walk(node):
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        # e.g. a def inside an if-block
+                        qual = f"{scope}.{sub.name}"
+                        self.graph.add_function(FunctionInfo(
+                            qualname=qual, module=self.module, node=sub,
+                            class_qual=class_qual))
+
+    def _decorated_jit(self, node: ast.AST) -> bool:
+        for dec in getattr(node, "decorator_list", []):
+            chain = attr_chain(dec.func if isinstance(dec, ast.Call)
+                               else dec)
+            if chain and self.full_name(chain).split(".")[-1] in \
+                    _JIT_WRAPPERS:
+                return True
+            if isinstance(dec, ast.Call):
+                full = self.full_name(chain) if chain else ""
+                if full.endswith("partial") and dec.args:
+                    inner = attr_chain(dec.args[0])
+                    if inner and self.full_name(inner).split(".")[-1] \
+                            in _JIT_WRAPPERS:
+                        return True
+        return False
+
+
+def _collect_self_aliases(graph: CallGraph, scanner: _ModuleScanner
+                          ) -> None:
+    for qual, info in list(graph.functions.items()):
+        if info.module != scanner.module or info.class_qual is None:
+            continue
+        for node in ast.walk(info.node):
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1):
+                continue
+            tgt = node.targets[0]
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            targets: List[Tuple[str, bool]] = []
+            if isinstance(node.value, ast.Name):
+                targets.append((node.value.id, False))
+            for call in _wrapped_calls(node.value):
+                chain = attr_chain(call.func)
+                if not chain:
+                    continue
+                leaf = scanner.full_name(chain).split(".")[-1]
+                if leaf in _JIT_WRAPPERS or leaf == "partial":
+                    for arg in call.args[:1]:
+                        inner = attr_chain(arg)
+                        if inner and len(inner) == 1:
+                            targets.append((inner[0],
+                                            leaf in _JIT_WRAPPERS))
+            for name, jitted in targets:
+                resolved = _resolve_local(graph, info, name)
+                if resolved is None:
+                    continue
+                cls = info.class_qual
+                graph.self_aliases.setdefault(cls, {})[tgt.attr] = resolved
+                if jitted:
+                    graph.jit_self_aliases.setdefault(cls, set()).add(
+                        tgt.attr)
+                    if resolved in graph.functions:
+                        graph.functions[resolved].is_jit_target = True
+
+
+def _resolve_local(graph: CallGraph, info: FunctionInfo, name: str
+                   ) -> Optional[str]:
+    """Resolve a bare name from inside ``info``: nested defs in the
+    enclosing scope chain, then module-level functions, then imports."""
+    scope = info.qualname
+    while True:
+        cand = f"{scope}.{name}"
+        if cand in graph.functions:
+            return cand
+        if "." not in scope:
+            break
+        scope = scope.rsplit(".", 1)[0]
+        if scope == info.module:
+            break
+    cand = f"{info.module}.{name}"
+    if cand in graph.functions:
+        return cand
+    binding = graph.imports.get(info.module, {}).get(name)
+    return binding
+
+
+def _local_instances(graph: CallGraph, scanner: _ModuleScanner,
+                     info: FunctionInfo, class_quals: Set[str]
+                     ) -> Dict[str, str]:
+    """Locals bound to instances of known classes
+    (``ex = _Executor(...)`` -> calls on ``ex`` resolve to
+    ``_Executor`` methods)."""
+    out: Dict[str, str] = {}
+    stack = list(ast.iter_child_nodes(info.node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            chain = attr_chain(node.value.func)
+            if chain and len(chain) == 1:
+                binding = graph.imports[scanner.module].get(chain[0])
+                for cand in (binding, f"{scanner.module}.{chain[0]}"):
+                    if cand in class_quals:
+                        out[node.targets[0].id] = cand
+                        break
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _collect_calls(graph: CallGraph, scanner: _ModuleScanner) -> None:
+    class_quals = {f.class_qual for f in graph.functions.values()
+                   if f.class_qual}
+    for qual, info in graph.functions.items():
+        if info.module != scanner.module:
+            continue
+        instances = _local_instances(graph, scanner, info, class_quals)
+        for call in _iter_calls(info.node):
+            chain = attr_chain(call.func)
+            if chain is None:
+                continue
+            if chain[0] in instances and len(chain) >= 2:
+                graph.add_edge(qual, f"{instances[chain[0]]}.{chain[1]}")
+                continue
+            if chain[0] == "self" and len(chain) >= 2 and info.class_qual:
+                alias = graph.self_aliases.get(info.class_qual, {})
+                target = alias.get(chain[1],
+                                   f"{info.class_qual}.{chain[1]}")
+                graph.add_edge(qual, target)
+                continue
+            full = scanner.full_name(chain)
+            leaf = full.split(".")[-1]
+            if leaf in _BODY_ARG_TRANSFORMS and (
+                    full.startswith(("jax.", "functools."))
+                    or full in ("jax", "functools")
+                    or "shard_map" in full):
+                for pos in _BODY_ARG_TRANSFORMS[leaf]:
+                    if pos < len(call.args):
+                        inner = attr_chain(call.args[pos])
+                        if inner and len(inner) == 1:
+                            resolved = _resolve_local(graph, info,
+                                                      inner[0])
+                            if resolved:
+                                graph.add_edge(qual, resolved)
+                                if leaf in _JIT_WRAPPERS and resolved \
+                                        in graph.functions:
+                                    graph.functions[resolved]\
+                                        .is_jit_target = True
+                continue
+            if len(chain) == 1:
+                resolved = _resolve_local(graph, info, chain[0])
+                if resolved:
+                    graph.add_edge(qual, resolved)
+            else:
+                binding = graph.imports[scanner.module].get(chain[0])
+                base = binding if binding is not None else None
+                if base is None:
+                    # maybe a module-level class: Cls.method(...)
+                    cand = f"{scanner.module}.{chain[0]}"
+                    base = cand
+                graph.add_edge(qual, ".".join([base] + chain[1:]))
+
+
+def _iter_calls(fn_node: ast.AST) -> Iterable[ast.Call]:
+    """Call nodes belonging to ``fn_node``: descends into lambdas and
+    plain statements but not into nested def/class (separate
+    functions)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def build_graph(trees: Dict[str, ast.Module]) -> CallGraph:
+    graph = CallGraph()
+    scanners = []
+    for module, tree in trees.items():
+        scanner = _ModuleScanner(graph, module, tree)
+        scanner.scan()
+        scanners.append(scanner)
+    for scanner in scanners:
+        _collect_self_aliases(graph, scanner)
+    for scanner in scanners:
+        _collect_calls(graph, scanner)
+    graph.finalize()
+    return graph

@@ -1,0 +1,146 @@
+"""Runtime sanitizers for the serving hot path.
+
+Two guards, both cheap enough to leave on in smoke tests:
+
+* :class:`Sanitizer` — wraps the scheduler's steady-state decode window
+  in ``jax.transfer_guard("disallow")``. Explicit ``jax.device_put`` /
+  ``jax.device_get`` stay legal; any *implicit* host transfer (a numpy
+  array or Python scalar sneaking into a jitted step) raises instead of
+  silently stalling the decode loop. Optional NaN debugging rides along.
+
+* :class:`CompileCounter` — a compile-count sentinel on
+  ``jax.log_compiles``. The serving claim is "each step function
+  compiles exactly once"; this turns the old ad-hoc test assertions into
+  a reusable guard (``counter.expect(admit=1, decode=1)``).
+
+This module imports jax — keep it out of :mod:`repro.analysis.lint`'s
+import path so the lint pass still runs on a bare Python install.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import re
+from typing import Dict, Iterator, Optional, Sequence
+
+import jax
+
+# jax logs one WARNING per XLA compilation on the ``jax._src.dispatch``
+# logger (propagating to "jax"), shaped like:
+#   Finished XLA compilation of jit(decode) in 0.123 sec
+_COMPILE_RE = re.compile(r"Finished XLA compilation of jit\(([^)]*)\)")
+
+
+class CompileCountError(AssertionError):
+    """A step function compiled a different number of times than the
+    serving invariant allows."""
+
+
+class CompileCounter(logging.Handler):
+    """Counts XLA compilations per jitted-function name.
+
+    ::
+
+        with CompileCounter(names=("admit", "decode")) as counter:
+            run_serving()
+        counter.expect(admit=1, decode=1)
+
+    ``names`` limits counting to the step functions under test — jax
+    also compiles tiny eager ops (``jit(broadcast_in_dim)`` etc.) that
+    are irrelevant to the sentinel.
+    """
+
+    def __init__(self, names: Optional[Sequence[str]] = None) -> None:
+        super().__init__(level=logging.NOTSET)
+        self.names = tuple(names) if names is not None else None
+        self.counts: Dict[str, int] = {}
+        self._ctx = None
+
+    # -- logging.Handler ------------------------------------------------
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.search(record.getMessage())
+        if not m:
+            return
+        name = m.group(1)
+        if self.names is not None and name not in self.names:
+            return
+        self.counts[name] = self.counts.get(name, 0) + 1
+
+    # -- context manager ------------------------------------------------
+    def __enter__(self) -> "CompileCounter":
+        self._ctx = jax.log_compiles(True)
+        self._ctx.__enter__()
+        logger = logging.getLogger("jax")
+        self._prev_level = logger.level
+        self._prev_propagate = logger.propagate
+        self._prev_handlers = list(logger.handlers)
+        # log_compiles emits at WARNING; make sure records reach this
+        # handler, and route them *only* here while armed (jax's own
+        # stderr handler would flood the console with the raw compile
+        # log — the counter is the interface)
+        if logger.level > logging.WARNING:
+            logger.setLevel(logging.WARNING)
+        logger.propagate = False
+        logger.handlers = [self]
+        return self
+
+    def __exit__(self, *exc) -> None:
+        logger = logging.getLogger("jax")
+        logger.handlers = self._prev_handlers
+        logger.setLevel(self._prev_level)
+        logger.propagate = self._prev_propagate
+        self._ctx.__exit__(*exc)
+        self._ctx = None
+
+    # -- assertions -----------------------------------------------------
+    def count(self, name: str) -> int:
+        return self.counts.get(name, 0)
+
+    def expect(self, **expected: int) -> None:
+        """Raise :class:`CompileCountError` unless every ``name=count``
+        matches exactly."""
+        bad = {name: (self.count(name), want)
+               for name, want in expected.items()
+               if self.count(name) != want}
+        if bad:
+            detail = ", ".join(
+                f"{name}: compiled {got}x, expected {want}"
+                for name, (got, want) in sorted(bad.items()))
+            raise CompileCountError(
+                f"compile-count sentinel tripped — {detail} "
+                f"(all counts: {self.counts})")
+
+
+@dataclasses.dataclass
+class Sanitizer:
+    """Runtime guard configuration threaded into the scheduler.
+
+    ``transfer_guard`` arms ``jax.transfer_guard("disallow")`` around
+    the steady-state decode window; ``nan_debug`` flips
+    ``jax_debug_nans`` for the whole session.
+    """
+
+    transfer_guard: bool = True
+    nan_debug: bool = False
+
+    def decode_guard(self) -> contextlib.AbstractContextManager:
+        """Context manager wrapped around each steady-state decode
+        dispatch. Implicit host->device transfers raise inside it;
+        explicit ``jax.device_put`` / ``jax.device_get`` remain legal."""
+        if self.transfer_guard:
+            return jax.transfer_guard("disallow")
+        return contextlib.nullcontext()
+
+    @contextlib.contextmanager
+    def session(self) -> Iterator["Sanitizer"]:
+        """Session-wide wiring (currently just NaN debugging)."""
+        if self.nan_debug:
+            with jax.debug_nans(True):
+                yield self
+        else:
+            yield self
+
+    def compile_counter(self, names: Optional[Sequence[str]] = None
+                        ) -> CompileCounter:
+        return CompileCounter(names=names)

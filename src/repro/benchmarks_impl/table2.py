@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pim import PimConfig
-from repro.core.workloads import mobilenet, resnet18, squeezenet
+from repro.core.workloads import resnet18, squeezenet
 from repro.data.pipeline import synthetic_images
 from repro.models.cnn import cnn_forward, init_cnn
 
@@ -58,7 +58,8 @@ def _train(layers, params, x, y, steps: int = 60, lr: float = 0.05):
 def _acc(params, layers, x, y, quant_bits=0, pim=None, rng=None) -> float:
     logits = cnn_forward(params, layers, x, quant_bits=quant_bits, pim=pim,
                          rng=rng)
-    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+    acc = jnp.mean(jnp.argmax(logits, -1) == y)
+    return float(jax.device_get(acc))
 
 
 def run_table2() -> List[Row]:

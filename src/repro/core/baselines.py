@@ -28,14 +28,15 @@ energies) comes from the workload specs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence
+from typing import Dict, List, Sequence
 
 from repro.core.arch import DEFAULT_ARCH, OpimaArch
-from repro.core.perfmodel import ENERGY, NetworkPerf, network_perf, total_power_w
-from repro.core.workloads import (WORKLOADS, ConvSpec, DenseSpec, LayerSpec,
-                                  total_macs, total_params)
+from repro.core.perfmodel import ENERGY, network_perf, total_power_w
+from repro.core.workloads import (WORKLOADS, LayerSpec, total_macs,
+                                  total_params)
 
-OPIMA_EPB_J_PER_BIT = ENERGY["opcm_write_j"] / DEFAULT_ARCH.cell_bits  # 62.5 pJ/b
+# 62.5 pJ/b
+OPIMA_EPB_J_PER_BIT = ENERGY["opcm_write_j"] / DEFAULT_ARCH.cell_bits
 
 
 def _fmap_bits(layers: Sequence[LayerSpec], bits: int) -> float:
@@ -68,7 +69,8 @@ class Platform:
     def fps(self, layers: Sequence[LayerSpec], bits: int = 8) -> float:
         return 1.0 / self.latency_s(layers, bits)
 
-    def fps_per_watt(self, layers: Sequence[LayerSpec], bits: int = 8) -> float:
+    def fps_per_watt(self, layers: Sequence[LayerSpec],
+                     bits: int = 8) -> float:
         return self.fps(layers, bits) / self.power_w
 
     def epb_j_per_bit(self) -> float:

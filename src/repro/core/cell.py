@@ -1,4 +1,5 @@
-"""OPCM cell transmission model + design-space exploration (paper §IV.A, Fig. 2).
+"""OPCM cell transmission model + design-space exploration
+(paper §IV.A, Fig. 2).
 
 The paper models a 2 µm-long GST patch on a silicon waveguide:
 
@@ -38,7 +39,7 @@ N_GST_CR, K_GST_CR = 6.11, 0.83
 
 # Calibrated surrogate constants (fit so the paper's design point
 # (w=0.48um, t=20nm) yields dTs<5% both states and contrast ~96%).
-_GAMMA_SAT = 0.357        # confinement saturation (crystalline-index mode pull)
+_GAMMA_SAT = 0.357        # confinement saturation (cryst.-index mode pull)
 _GAMMA_T0_NM = 11.0       # thickness scale of confinement saturation
 _GAMMA_W0_UM = 0.35       # width scale (fast saturation past single-mode w)
 _GAMMA_INDEX_POW = 3.0    # mode pull-up into film grows with film index
@@ -86,8 +87,8 @@ def scattering_loss(width_um: jax.Array, thickness_nm: jax.Array,
     multimode = 1.0 + jnp.where(
         n_gst < 0.5 * (N_GST_AM + N_GST_CR),
         jnp.exp((width_um - _MULTIMODE_ONSET_UM) / _MULTIMODE_SCALE_UM), 0.0)
-    return jnp.clip(_SCATTER_BASE * fresnel * w_mismatch * t_growth * multimode,
-                    0.0, 1.0)
+    scatter = _SCATTER_BASE * fresnel * w_mismatch * t_growth * multimode
+    return jnp.clip(scatter, 0.0, 1.0)
 
 
 def absorption(width_um: jax.Array, thickness_nm: jax.Array,

@@ -63,7 +63,7 @@ def map_layer(layer: LayerSpec, arch: OpimaArch = DEFAULT_ARCH,
     passes = _nibble_passes(weight_bits, act_bits, arch.cell_bits)
 
     if isinstance(layer, ConvSpec):
-        rf_row = layer.kw * layer.in_c_per_group     # λ per chain (1 kernel row)
+        rf_row = layer.kw * layer.in_c_per_group  # λ/chain (1 kernel row)
         lam_chain = min(rf_row, C)
         depth = min(layer.kh, row_subarrays)
         chains = max(1, min(C // lam_chain if lam_chain < C else 1,

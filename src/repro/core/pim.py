@@ -102,7 +102,10 @@ class PimConfig:
                                    # and analog, uses the cell-DSE implied one
     use_pallas: bool = True       # DEPRECATED: substrate="exact-pallas" /
                                   # "exact-jnp"
-    interpret: bool = True        # Pallas interpret mode (CPU container)
+    interpret: Optional[bool] = None  # Pallas interpret mode; None ->
+                                      # per-backend (interpreter off-TPU,
+                                      # compiled Mosaic on TPU) via
+                                      # kernels.runtime.resolve_interpret
 
     @property
     def weight_planes(self) -> int:

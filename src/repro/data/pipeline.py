@@ -16,10 +16,8 @@ example training runs — pure-uniform tokens would have nothing to learn.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

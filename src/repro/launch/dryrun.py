@@ -36,9 +36,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, get_config
 from repro.distributed.sharding import ShardingContext, use_sharding
 from repro.launch.mesh import make_production_mesh
-from repro.launch.train import (batch_shardings, init_state, lm_loss,
-                                make_train_step, param_shardings,
-                                state_shardings)
+from repro.launch.train import (batch_shardings, make_train_step,
+                                param_shardings, state_shardings)
 from repro.models.lm import decode_step, forward, init_cache, init_lm
 from repro.optim.adamw import AdamWConfig, AdamWState
 

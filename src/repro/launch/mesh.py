@@ -5,7 +5,6 @@ module does not touch jax device state.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -65,8 +65,8 @@ import numpy as np
 
 from repro import engine
 from repro.configs.base import ModelConfig, get_config
-from repro.core.pim import PimConfig
 from repro.core.perfmodel import network_perf, total_power_w
+from repro.core.pim import PimConfig
 from repro.core.workloads import DenseSpec
 from repro.models.lm import decode_step, init_lm, prefill
 from repro.quant.quantize import fake_quantize
@@ -216,7 +216,7 @@ def _params_digest(params) -> str:
     import hashlib
     h = hashlib.sha256()
     for leaf in jax.tree.leaves(params):
-        h.update(np.asarray(leaf).tobytes())
+        h.update(jax.device_get(leaf).tobytes())
     return h.hexdigest()[:16]
 
 
@@ -406,8 +406,17 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
             (batch, prompt_len, cfg.d_model)), jnp.float32)
 
     max_len = prompt_len + extra + gen
-    prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b, max_len=max_len))
-    decode_fn = jax.jit(lambda p, c, t, i: decode_step(p, cfg, c, t, i))
+
+    # named (not lambdas) so compile-log lines read jit(serve_prefill) /
+    # jit(serve_decode) — the sanitize compile sentinel keys on them
+    def serve_prefill(p, b):
+        return prefill(p, cfg, b, max_len=max_len)
+
+    def serve_decode(p, c, t, i):
+        return decode_step(p, cfg, c, t, i)
+
+    prefill_fn = jax.jit(serve_prefill)
+    decode_fn = jax.jit(serve_decode)
 
     t0 = time.time()
     logits, cache = prefill_fn(params, batch_in)
@@ -431,8 +440,7 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
     result = {
         "mode": "static",
         "arch": cfg.name,
-        "generated": np.concatenate(
-            [np.asarray(t) for t in out_tokens], axis=1),
+        "generated": np.concatenate(jax.device_get(out_tokens), axis=1),
         "prefill_s": t_prefill,
         "decode_s_per_token": t_decode / gen,
         "generated_tokens": batch * gen,
@@ -489,7 +497,8 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                      trace_file: Optional[str] = None, seed: int = 0,
                      sync_every: int = 1, mesh: Optional[str] = None,
                      compile_cache_dir: Optional[str] = None,
-                     metrics_json: Optional[str] = None) -> Dict[str, Any]:
+                     metrics_json: Optional[str] = None,
+                     sanitize: bool = False) -> Dict[str, Any]:
     """Continuous-batching serve: requests with heterogeneous arrival
     times and prompt/generation lengths stream through a fixed pool of
     ``num_slots`` decode slots backed by the same programmed plans the
@@ -523,13 +532,34 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
             gen_lens=list(range(g_lo, gen + 1)),
             vocab=cfg.vocab_size, seed=seed)
         prompt_pad, max_len = prompt_len, prompt_len + gen
+    sanitizer = None
+    if sanitize:
+        from repro.analysis.sanitize import Sanitizer
+        sanitizer = Sanitizer(transfer_guard=True)
     sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
                                 prompt_pad=prompt_pad, max_len=max_len,
-                                sync_every=sync_every, mesh=dev_mesh)
-    sched.warmup()   # keep first-call compile out of the metered run
-    run = sched.run(requests)
+                                sync_every=sync_every, mesh=dev_mesh,
+                                sanitizer=sanitizer)
+    if sanitizer is not None:
+        # every steady-state decode dispatch runs under
+        # transfer_guard("disallow"), and the compile sentinel proves
+        # each step function compiled exactly once (in warmup)
+        names = ("admit", "decode", "decode_window")
+        with sanitizer.compile_counter(names) as counter:
+            sched.warmup()
+            run = sched.run(requests)
+        expected = {"admit": 1, "decode": 1}
+        if sync_every > 1:
+            expected["decode_window"] = 1
+        counter.expect(**expected)
+    else:
+        sched.warmup()   # keep first-call compile out of the metered run
+        run = sched.run(requests)
 
     result: Dict[str, Any] = dict(run.metrics)
+    if sanitizer is not None:
+        result["sanitize"] = {"transfer_guard": True,
+                              "compiles": dict(counter.counts)}
     result["arch"] = cfg.name
     if mesh:
         result["mesh"] = mesh
@@ -609,6 +639,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-json", default=None,
                     help="write the structured run metrics to this path")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="arm the runtime sanitizers (continuous mode): "
+                         "transfer_guard('disallow') around every "
+                         "steady-state decode dispatch and a "
+                         "compile-count sentinel asserting each step "
+                         "function compiled exactly once")
     args = ap.parse_args()
     if args.continuous:
         res = serve_continuous(
@@ -621,7 +657,10 @@ def main() -> None:
             arrival_rate=args.arrival_rate, trace_file=args.trace_file,
             seed=args.seed, sync_every=args.sync_every, mesh=args.mesh,
             compile_cache_dir=args.compile_cache_dir,
-            metrics_json=args.metrics_json)
+            metrics_json=args.metrics_json, sanitize=args.sanitize)
+        if args.sanitize:
+            print(f"[serve] sanitize: transfer guard armed, compiles "
+                  f"{res['sanitize']['compiles']}")
         print(f"[serve] continuous: {res['num_requests']} requests through "
               f"{res['num_slots']} slots, {res['decode_steps']} decode "
               f"steps in {res['host_syncs']} host syncs "

@@ -8,20 +8,17 @@ Run (example):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
 import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, get_config
 from repro.data.pipeline import DataConfig, LMDataIterator
-from repro.distributed.sharding import (ShardingContext, logical_rules,
-                                        param_spec_for_path, use_sharding)
+from repro.distributed.sharding import (logical_rules,
+                                        param_spec_for_path)
 from repro.models.lm import forward, init_lm
 from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
                                adamw_update)

@@ -243,7 +243,8 @@ def attention_block(p: Params, x: jax.Array, positions: jax.Array,
     s = x.shape[1]
     if backend in ("pallas", "pallas_interp") and s % block == 0 and \
             isinstance(window, int) and isinstance(prefix_len, int):
-        # VMEM-resident flash kernel (real-TPU path; see kernels/flash_attention)
+        # VMEM-resident flash kernel (real-TPU path;
+        # see kernels/flash_attention)
         from repro.kernels.flash_attention.ops import flash_attention
         out = flash_attention(q, k, v, causal, window, prefix_len,
                               backend=backend, bq=block, bk=block)

@@ -10,7 +10,7 @@ Parameter naming drives sharding (distributed/sharding.py):
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,8 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float
                ) -> jax.Array:
     """x: (..., seq, heads, head_dim); positions: (..., seq)."""
     freqs = rope_frequencies(x.shape[-1], theta)
-    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, hd/2)
+    # (.., s, hd/2)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs
     cos = jnp.cos(angles)[..., :, None, :]
     sin = jnp.sin(angles)[..., :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

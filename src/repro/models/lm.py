@@ -19,7 +19,6 @@ API:
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -166,8 +165,8 @@ def _stack(cfg: ModelConfig, layers: Params, x: jax.Array, positions,
                 z + aux.get("moe_z_loss", 0.0)), None
 
     if cfg.remat:
-        body = jax.checkpoint(
-            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, policy=policy)
     n = windows.shape[0]
     (x, lb, z), _ = jax.lax.scan(body, (x, 0.0, 0.0), (layers, windows),
                                  unroll=n if cfg.unroll_layers else 1)

@@ -23,7 +23,7 @@ caller for the training objective.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,8 @@ def moe_init(key, d_model: int, num_experts: int, d_ff: int,
     ks = jax.random.split(key, 5)
     scale = 1.0 / jnp.sqrt(d_model)
     p = {
-        "router_de": dense_init(ks[0], d_model, num_experts, dtype=jnp.float32),
+        "router_de": dense_init(ks[0], d_model, num_experts,
+                                dtype=jnp.float32),
         "wi_edf": (jax.random.normal(ks[1], (num_experts, d_model, d_ff)) *
                    scale).astype(dtype),
         "wg_edf": (jax.random.normal(ks[2], (num_experts, d_model, d_ff)) *
@@ -148,8 +149,8 @@ def _moe_ep_body(x2, probs, ids, wi, wg, wo, *, num_experts: int,
     """shard_map body: wi/wg/wo hold the LOCAL expert slice.
 
     Perf structure (EXPERIMENTS.md §Perf iter 2): after the expert sort,
-    only the first ``cap ~= T·k/ep_size · cf (cf=1.25)`` rows can belong to local
-    experts (statistically balanced routing over >=32k tokens), so the
+    only the first ``cap ~= T·k/ep_size · cf (cf=1.25)`` rows can belong
+    to local experts (statistically balanced routing over >=32k tokens), so the
     gather / grouped-matmul / scatter run on a 16x smaller row block
     instead of carrying 15/16 trash rows; the combine psum runs in the
     activation dtype (bf16 on TPU) instead of f32.

@@ -1,11 +1,14 @@
-from repro.quant.quantize import (QTensor, compute_scale, dynamic_quantize_activations,
-                                  fake_quantize, qmax, quantization_mse, quantize)
-from repro.quant.nibbles import (NIBBLE_BASE, NIBBLE_BITS, from_nibbles, num_nibbles,
-                                 pack_nibble_pair, to_nibbles, unpack_nibble_pair)
+from repro.quant.nibbles import (NIBBLE_BASE, NIBBLE_BITS, from_nibbles,
+                                 num_nibbles, pack_nibble_pair, to_nibbles,
+                                 unpack_nibble_pair)
+from repro.quant.quantize import (QTensor, compute_scale,
+                                  dynamic_quantize_activations,
+                                  fake_quantize, qmax, quantization_mse,
+                                  quantize)
 
 __all__ = [
-    "QTensor", "compute_scale", "dynamic_quantize_activations", "fake_quantize",
-    "qmax", "quantization_mse", "quantize",
+    "QTensor", "compute_scale", "dynamic_quantize_activations",
+    "fake_quantize", "qmax", "quantization_mse", "quantize",
     "NIBBLE_BASE", "NIBBLE_BITS", "from_nibbles", "num_nibbles",
     "pack_nibble_pair", "to_nibbles", "unpack_nibble_pair",
 ]

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,7 @@ trace-replayable; wall-clock throughput is reported alongside.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -120,13 +121,16 @@ def static_generate(params, cfg: ModelConfig, tokens: np.ndarray,
                                max_len=plen + max_new_tokens,
                                cache_dtype=cache_dtype)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [int(tok[0])]
+    out = [tok[0]]
     for g in range(1, max_new_tokens):
         logits, cache = lm.decode_step(params, cfg, cache, tok[:, None],
                                        jnp.int32(plen + g - 1))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(int(tok[0]))
-    return np.asarray(out, np.int32)
+        out.append(tok[0])
+    # one sync at the end instead of one per generated token — the
+    # decode chain stays async on device (same fix as the serve.py loop)
+    host = jax.device_get(out)
+    return np.asarray(host, np.int32)
 
 
 class ContinuousScheduler:
@@ -142,7 +146,8 @@ class ContinuousScheduler:
                  prompt_pad: int, max_len: int,
                  max_prefills_per_step: int = 1,
                  cache_dtype=jnp.bfloat16, sync_every: int = 1,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 sanitizer=None):
         slots_mod.check_slot_compatible(cfg)
         if prompt_pad > max_len:
             raise ValueError(f"prompt_pad={prompt_pad} exceeds "
@@ -159,6 +164,10 @@ class ContinuousScheduler:
         self.max_prefills_per_step = max_prefills_per_step
         self.cache_dtype = cache_dtype
         self.sync_every = sync_every
+        # duck-typed repro.analysis.sanitize.Sanitizer (kept untyped so
+        # the scheduler never imports the analysis layer); its
+        # decode_guard() wraps each steady-state decode dispatch
+        self.sanitizer = sanitizer
         # Device mesh: plans inside ``params`` carry their own sharding
         # (engine.shard_plan_tree); the scheduler's job is placing the
         # slot cache and per-step token/position vectors. Slots split
@@ -202,12 +211,15 @@ class ContinuousScheduler:
         return jax.tree_util.tree_map(put, cache)
 
     def _place_vec(self, vec):
-        """Place a per-slot (S,) or (S, 1) host vector on the mesh."""
-        arr = jnp.asarray(vec)
+        """Place a per-slot (S,) or (S, 1) host vector on the mesh.
+
+        Explicit ``jax.device_put`` (not ``jnp.asarray``) so per-step
+        placement stays legal under ``jax.transfer_guard("disallow")``
+        when a sanitizer arms the decode window."""
         if self.mesh is None:
-            return arr
+            return jax.device_put(vec)
         from jax.sharding import NamedSharding
-        return jax.device_put(arr, NamedSharding(self.mesh,
+        return jax.device_put(vec, NamedSharding(self.mesh,
                                                  self._vec_spec))
 
     # ------------------------------------------------------------------
@@ -358,7 +370,7 @@ class ContinuousScheduler:
                 prefills += 1
                 admitted += 1
                 cb.on_admit(req.request_id, slot, step + 1.0)
-                tok0 = int(tok0)
+                tok0 = int(jax.device_get(tok0))
                 cb.on_token(req.request_id, tok0, 0)
                 st = _InFlight(req=req, slot=slot, admit_step=step + 1.0,
                                tokens=[tok0], pos=plen)
@@ -397,16 +409,26 @@ class ContinuousScheduler:
                 for slot, st in active.items():
                     tok_vec[slot, 0] = st.tokens[-1]
                     pos_vec[slot] = st.pos
+                # steady state: placement is explicit (device_put), the
+                # dispatch runs under the sanitizer's transfer guard
+                # (when armed), and the result comes back through an
+                # explicit device_get — no implicit transfer anywhere
+                tok_dev = self._place_vec(tok_vec)
+                pos_dev = self._place_vec(pos_vec)
+                guard = (self.sanitizer.decode_guard()
+                         if self.sanitizer is not None
+                         else contextlib.nullcontext())
+                with guard:
+                    if window > 1:
+                        toks_dev, cache = self._decode_window_fn(
+                            self.params, cache, tok_dev, pos_dev)
+                    else:
+                        next_dev, cache = self._decode_fn(
+                            self.params, cache, tok_dev, pos_dev)
                 if window > 1:
-                    toks_seq, cache = self._decode_window_fn(
-                        self.params, cache, self._place_vec(tok_vec),
-                        self._place_vec(pos_vec))
-                    toks_seq = np.asarray(toks_seq)     # (window, S)
+                    toks_seq = jax.device_get(toks_dev)  # (window, S)
                 else:
-                    next_toks, cache = self._decode_fn(
-                        self.params, cache, self._place_vec(tok_vec),
-                        self._place_vec(pos_vec))
-                    toks_seq = np.asarray(next_toks)[None]
+                    toks_seq = jax.device_get(next_dev)[None]
                 host_syncs += 1
                 decode_steps += window
                 occupancy_acc += window * len(active)
