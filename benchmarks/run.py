@@ -9,7 +9,9 @@ Prints ``name,value,derived`` CSV. Usage:
 ``--json PATH`` runs the engine + serving benchmark set (plan-once /
 substrate sweep / device-mesh sweep from :mod:`benchmarks.pim_plan_bench`
 plus the static-vs-continuous serving comparison from
-:mod:`benchmarks.serving_bench`) and writes one JSON object keyed by
+:mod:`benchmarks.serving_bench` and the per-phase engine microbenchmark
+from :mod:`benchmarks.decode_microbenchmark`) and writes one JSON object
+keyed by
 benchmark name, each entry carrying whichever of ``tokens_per_s``,
 ``wall_ms``, ``peak_temp_mib`` the benchmark measures (plus raw ``value``
 for ratios/counters). The mesh sweep needs virtual devices, so XLA_FLAGS
@@ -52,7 +54,8 @@ def run_json(path: str) -> None:
             os.environ.get("XLA_FLAGS", "") +
             " --xla_force_host_platform_device_count=4").strip()
     import json
-    from benchmarks import pim_plan_bench, serving_bench
+    from benchmarks import (decode_microbenchmark, pim_plan_bench,
+                            serving_bench)
     sections = {}
     t0 = time.time()
     sections["pim_plan"] = _rows_to_json(
@@ -63,6 +66,8 @@ def run_json(path: str) -> None:
         pim_plan_bench.mesh_sweep_bench())
     sections["serving"] = _rows_to_json(
         serving_bench.serving_bench("exact-jnp"))
+    sections["serving_engine"] = _rows_to_json(
+        decode_microbenchmark.all_rows())
     sections["meta"] = {
         "devices": len(__import__("jax").devices()),
         "wall_s_total": time.time() - t0,

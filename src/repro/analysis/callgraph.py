@@ -23,6 +23,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 DEFAULT_HOT_ROOTS: Tuple[str, ...] = (
     "repro.models.lm.decode_step",
     "repro.serving.scheduler.ContinuousScheduler.run",
+    "repro.serving.engine.ServingEngine.generate",
+    "repro.serving.engine.ServingEngine.prefill_step",
     "repro.engine.api.matmul",
 )
 

@@ -11,7 +11,7 @@ Two guards, both cheap enough to leave on in smoke tests:
 * :class:`CompileCounter` — a compile-count sentinel on
   ``jax.log_compiles``. The serving claim is "each step function
   compiles exactly once"; this turns the old ad-hoc test assertions into
-  a reusable guard (``counter.expect(admit=1, decode=1)``).
+  a reusable guard (``counter.expect(prefill=1, decode=1)``).
 
 This module imports jax — keep it out of :mod:`repro.analysis.lint`'s
 import path so the lint pass still runs on a bare Python install.
@@ -42,9 +42,9 @@ class CompileCounter(logging.Handler):
 
     ::
 
-        with CompileCounter(names=("admit", "decode")) as counter:
+        with CompileCounter(names=("prefill", "decode")) as counter:
             run_serving()
-        counter.expect(admit=1, decode=1)
+        counter.expect(prefill=1, decode=1)
 
     ``names`` limits counting to the step functions under test — jax
     also compiles tiny eager ops (``jit(broadcast_in_dim)`` etc.) that

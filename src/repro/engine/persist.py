@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -82,6 +83,25 @@ def describe_plan_tree(tree: Any) -> Dict[str, Any]:
 
 def _zeros(spec: Dict[str, Any]):
     return jnp.zeros(tuple(spec["shape"]), jnp.dtype(spec["dtype"]))
+
+
+def _shard_stamps(spec: Dict[str, Any], path: str = "") -> list:
+    """Collect (path, shard) pairs recorded in a plan-tree spec — the
+    stamps :func:`build_plan_template` does NOT restore (a template plan
+    carries no placement; only ``_replace_on_mesh`` re-stamps them)."""
+    kind = spec.get("kind")
+    out = []
+    if kind in ("dense-plan", "expert-plan") and spec.get("shard"):
+        out.append((path or "<root>", spec["shard"]))
+    if kind == "dict":
+        for k, v in spec["items"].items():
+            out += _shard_stamps(v, f"{path}/{k}" if path else k)
+    elif kind in ("list", "tuple"):
+        for i, v in enumerate(spec["items"]):
+            out += _shard_stamps(v, f"{path}[{i}]")
+    elif kind == "expert-plan":
+        out += _shard_stamps(spec["dense"], f"{path}.dense")
+    return out
 
 
 def build_plan_template(spec: Dict[str, Any]) -> Any:
@@ -184,5 +204,15 @@ def load_plans(directory: str, step: Optional[int] = None, *,
                                                   step=step)
     if mesh is not None:
         plans = _replace_on_mesh(plans, spec, mesh)
+    else:
+        stamps = _shard_stamps(spec)
+        if stamps:
+            head = ", ".join(
+                f"{p}:{s['kind']}@axis{s['axis']}" for p, s in stamps[:3])
+            more = f", +{len(stamps) - 3} more" if len(stamps) > 3 else ""
+            warnings.warn(
+                f"load_plans(mesh=None) drops {len(stamps)} saved shard "
+                f"stamp(s) ({head}{more}); plans restore replicated — "
+                f"pass mesh= to re-place them", UserWarning, stacklevel=2)
     extras = {k: v for k, v in extras.items() if k != PLANS_EXTRAS_KEY}
     return plans, step, extras

@@ -57,7 +57,7 @@ import argparse
 import json
 import time
 import warnings
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -382,12 +382,22 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
           greedy: bool = True, pim_substrate: Optional[str] = None,
           plan_dir: Optional[str] = None, mesh: Optional[str] = None,
           compile_cache_dir: Optional[str] = None,
-          metrics_json: Optional[str] = None) -> Dict[str, Any]:
+          metrics_json: Optional[str] = None,
+          stop_tokens: Sequence[int] = (),
+          eos_token: Optional[int] = None) -> Dict[str, Any]:
     """Run one batched serve request; ``pim_substrate`` names the engine
     route (default ``exact-pallas``; ``pim_emulate=True`` is the
     deprecated spelling of ``pim_substrate="emulate"``). ``mesh`` is a
     "dp,tp" device-mesh spec — the programmed plans are split over the
-    mesh and the batch matmuls run tensor/expert-parallel."""
+    mesh and the batch matmuls run tensor/expert-parallel.
+
+    ``stop_tokens`` / ``eos_token`` give the static path the same stop
+    semantics as the serving engine, applied *post hoc*: the lock-step
+    loop still runs the full ``gen`` steps (all rows finish together —
+    that is what makes the mode static), then each row is truncated at
+    its first stop token and classified. Greedy rows are independent, so
+    the truncated prefix is exactly what the continuous engine emits for
+    the same request."""
     cfg, params, substrate, pim_cfg, _ = _setup(
         arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
         plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir)
@@ -437,14 +447,43 @@ def serve(arch: str, batch: int = 2, prompt_len: int = 16, gen: int = 8,
     t_decode = time.time() - t0
 
     total_s = t_prefill + t_decode
+    generated = np.concatenate(jax.device_get(out_tokens), axis=1)
+    # post-hoc stop semantics: truncate each row at its first stop token
+    # and classify why it ended (mirrors Completion.stop_reason in
+    # continuous mode; the stop token itself is the last emitted token)
+    stop_set = {int(t) for t in stop_tokens}
+    if eos_token is not None:
+        stop_set.add(int(eos_token))
+    is_stop = np.isin(generated, sorted(stop_set))
+    reasons: List[str] = []
+    emitted: List[List[int]] = []
+    for row, row_stop in zip(generated.tolist(), is_stop):
+        reason, cut = "budget", len(row)
+        hits = np.flatnonzero(row_stop)
+        if hits.size:
+            cut = int(hits[0]) + 1
+            reason = ("eos" if eos_token is not None
+                      and row[cut - 1] == int(eos_token) else "stop_token")
+        reasons.append(reason)
+        emitted.append(row[:cut])
+    reason_counts = {"budget": 0, "eos": 0, "stop_token": 0}
+    for r in reasons:
+        reason_counts[r] += 1
     result = {
         "mode": "static",
         "arch": cfg.name,
-        "generated": np.concatenate(jax.device_get(out_tokens), axis=1),
+        "generated": generated,
         "prefill_s": t_prefill,
         "decode_s_per_token": t_decode / gen,
         "generated_tokens": batch * gen,
         "tokens_per_s": batch * gen / total_s if total_s > 0 else 0.0,
+        # stop accounting: per-row reason + truncated sequences; the
+        # lock-step loop computes (and counts) all batch*gen tokens
+        # either way, so throughput fields above stay loop-accurate
+        "stop_reasons": reason_counts,
+        "row_stop_reasons": reasons,
+        "emitted": emitted,
+        "emitted_tokens": sum(len(e) for e in emitted),
     }
     if pim:
         result["pim_substrate"] = substrate
@@ -480,9 +519,11 @@ def _load_trace(trace_file: str, vocab: int, seed: int) -> List[Any]:
             raise ValueError(
                 f"trace record {i} in {trace_file} needs either "
                 f"'tokens' or 'prompt_len': {rec}")
-        reqs.append(Request(request_id=rec.get("id", i), tokens=toks,
-                            max_new_tokens=int(rec["gen"]),
-                            arrival=float(rec.get("arrival", 0.0))))
+        reqs.append(Request(
+            request_id=rec.get("id", i), tokens=toks,
+            max_new_tokens=int(rec["gen"]),
+            arrival=float(rec.get("arrival", 0.0)),
+            shared_prefix_len=int(rec.get("shared_prefix_len", 0))))
     return reqs
 
 
@@ -498,7 +539,12 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                      sync_every: int = 1, mesh: Optional[str] = None,
                      compile_cache_dir: Optional[str] = None,
                      metrics_json: Optional[str] = None,
-                     sanitize: bool = False) -> Dict[str, Any]:
+                     sanitize: bool = False,
+                     stop_tokens: Sequence[int] = (),
+                     eos_token: Optional[int] = None,
+                     prefill_chunk: Optional[int] = None,
+                     prefix_cache: int = 0,
+                     shared_prefix: int = 0) -> Dict[str, Any]:
     """Continuous-batching serve: requests with heterogeneous arrival
     times and prompt/generation lengths stream through a fixed pool of
     ``num_slots`` decode slots backed by the same programmed plans the
@@ -508,10 +554,22 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     exponential inter-arrivals at ``arrival_rate`` requests/step, prompt
     lengths mixed in [prompt_len//4, prompt_len], generation lengths in
     [max(1, gen//4), gen]. ``prompt_len``/``gen`` therefore bound the
-    slot geometry: prompts pad to ``prompt_len``, the KV cache rows are
-    ``prompt_len + gen`` long.
+    slot geometry: prompts pad to ``prompt_len`` (plus the shared
+    prefix, when one is configured), the KV cache rows are
+    ``prompt_pad + gen`` long.
+
+    Serving-engine semantics pass straight through: ``stop_tokens`` /
+    ``eos_token`` retire a slot the step its sequence finishes
+    (on-device detection), ``prefill_chunk`` interleaves long prompts
+    with decode one chunk per scheduler iteration, ``prefix_cache``
+    (entry capacity) turns on content-hashed KV reuse, and
+    ``shared_prefix`` prepends a common random prefix of that length to
+    every synthetic prompt — the shared-system-prompt traffic shape the
+    prefix cache exists for.
     """
     from repro.serving import ContinuousScheduler, poisson_trace
+    if shared_prefix < 0:
+        raise ValueError("shared_prefix must be >= 0")
     cfg, params, substrate, pim_cfg, dev_mesh = _setup(
         arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
         plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir)
@@ -530,8 +588,10 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
             n=num_requests, rate=arrival_rate,
             prompt_lens=list(range(p_lo, prompt_len + 1)),
             gen_lens=list(range(g_lo, gen + 1)),
-            vocab=cfg.vocab_size, seed=seed)
-        prompt_pad, max_len = prompt_len, prompt_len + gen
+            vocab=cfg.vocab_size, seed=seed,
+            shared_prefix_len=shared_prefix)
+        prompt_pad = prompt_len + shared_prefix
+        max_len = prompt_pad + gen
     sanitizer = None
     if sanitize:
         from repro.analysis.sanitize import Sanitizer
@@ -539,16 +599,23 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
                                 prompt_pad=prompt_pad, max_len=max_len,
                                 sync_every=sync_every, mesh=dev_mesh,
-                                sanitizer=sanitizer)
+                                sanitizer=sanitizer,
+                                stop_tokens=stop_tokens,
+                                eos_token=eos_token,
+                                prefill_chunk=prefill_chunk,
+                                prefix_cache=prefix_cache)
     if sanitizer is not None:
         # every steady-state decode dispatch runs under
         # transfer_guard("disallow"), and the compile sentinel proves
-        # each step function compiled exactly once (in warmup)
-        names = ("admit", "decode", "decode_window")
+        # each step function compiled exactly once (in warmup). Chunked
+        # mode compiles prefill_chunk instead of the single-shot prefill.
+        prefill_name = ("prefill_chunk" if sched.prefill_chunk is not None
+                        else "prefill")
+        names = (prefill_name, "insert", "decode", "decode_window")
         with sanitizer.compile_counter(names) as counter:
             sched.warmup()
             run = sched.run(requests)
-        expected = {"admit": 1, "decode": 1}
+        expected = {prefill_name: 1, "insert": 1, "decode": 1}
         if sync_every > 1:
             expected["decode_window"] = 1
         counter.expect(**expected)
@@ -566,7 +633,9 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     result["requests"] = [
         {"id": c.request_id, "prompt_len": int(c.prompt.shape[0]),
          "tokens": c.tokens, "arrival_step": c.arrival_step,
-         "ttft_steps": c.ttft_steps, "latency_steps": c.latency_steps}
+         "ttft_steps": c.ttft_steps, "latency_steps": c.latency_steps,
+         "stop_reason": c.stop_reason,
+         "first_token_wall_s": c.first_token_wall_s}
         for c in run.completions]
     if pim:
         result["pim_substrate"] = substrate
@@ -637,6 +706,29 @@ def main() -> None:
                          "token syncs when no admission/retirement can "
                          "intervene; tokens are identical to 1")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stop-tokens", default=None, metavar="T1,T2,...",
+                    help="comma-separated stop-token ids: a sequence "
+                         "ends the step one is emitted (continuous mode: "
+                         "detected on-device, slot retired immediately; "
+                         "static mode: rows truncated post hoc)")
+    ap.add_argument("--eos-token", type=int, default=None,
+                    help="EOS token id (reported as stop_reason='eos'; "
+                         "otherwise same semantics as --stop-tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (continuous mode): split "
+                         "prompts into chunks of this many tokens, one "
+                         "chunk per scheduler iteration, so long prompts "
+                         "interleave with in-flight decode; tokens are "
+                         "bit-identical to single-shot prefill")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="CAP",
+                    help="content-hashed prefix-cache capacity in "
+                         "entries (continuous mode): 0 disables; full-"
+                         "prompt hits skip prefill, shared-prefix hits "
+                         "(with --prefill-chunk) run only the tail")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="LEN",
+                    help="prepend a common random prefix of LEN tokens "
+                         "to every synthetic prompt (continuous mode; "
+                         "the shared-system-prompt traffic shape)")
     ap.add_argument("--metrics-json", default=None,
                     help="write the structured run metrics to this path")
     ap.add_argument("--sanitize", action="store_true",
@@ -646,6 +738,9 @@ def main() -> None:
                          "compile-count sentinel asserting each step "
                          "function compiled exactly once")
     args = ap.parse_args()
+    stop_tokens = tuple(
+        int(t) for t in args.stop_tokens.split(",") if t.strip()
+    ) if args.stop_tokens else ()
     if args.continuous:
         res = serve_continuous(
             args.arch, num_slots=args.num_slots,
@@ -657,7 +752,11 @@ def main() -> None:
             arrival_rate=args.arrival_rate, trace_file=args.trace_file,
             seed=args.seed, sync_every=args.sync_every, mesh=args.mesh,
             compile_cache_dir=args.compile_cache_dir,
-            metrics_json=args.metrics_json, sanitize=args.sanitize)
+            metrics_json=args.metrics_json, sanitize=args.sanitize,
+            stop_tokens=stop_tokens, eos_token=args.eos_token,
+            prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache,
+            shared_prefix=args.shared_prefix)
         if args.sanitize:
             print(f"[serve] sanitize: transfer guard armed, compiles "
                   f"{res['sanitize']['compiles']}")
@@ -675,16 +774,22 @@ def main() -> None:
               f"steps; latency p50/p90/p99 = {res['latency_steps_p50']:.1f}/"
               f"{res['latency_steps_p90']:.1f}/"
               f"{res['latency_steps_p99']:.1f} steps")
+        print(f"[serve] stop reasons: {res['stop_reasons']}" + (
+            f"; prefix cache: {res['prefix_cache']}"
+            if res.get("prefix_cache") else ""))
     else:
         res = serve(args.arch, args.batch, args.prompt_len, args.gen,
                     args.layers, args.d_model, args.pim, args.pim_bits,
                     args.pim_emulate, pim_substrate=args.pim_substrate,
                     plan_dir=args.plan_dir, mesh=args.mesh,
                     compile_cache_dir=args.compile_cache_dir,
-                    metrics_json=args.metrics_json)
+                    metrics_json=args.metrics_json,
+                    stop_tokens=stop_tokens, eos_token=args.eos_token)
         print(f"[serve] prefill {res['prefill_s']*1e3:.1f}ms, "
               f"decode {res['decode_s_per_token']*1e3:.1f}ms/tok")
         print(f"[serve] tokens:\n{res['generated']}")
+        if stop_tokens or args.eos_token is not None:
+            print(f"[serve] stop reasons: {res['stop_reasons']}")
     if "pim_substrate" in res:
         print(f"[serve] pim_substrate = {res['pim_substrate']}")
     for k, v in res.items():

@@ -186,16 +186,19 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
                      norm_eps: float = 1e-6,
                      seq_shard: bool = False
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode. x: (b, 1, d); cache k/v: (b, S, kv, hd);
-    index: current position — a scalar shared by the whole batch (static
-    lock-step decode) or a per-row (b,) vector (continuous batching: each
-    slot sits at its own sequence offset and the new K/V land at per-row
-    positions). Returns (out (b,1,d'), new cache)."""
-    b = x.shape[0]
+    """Token-block decode. x: (b, c, d) — c == 1 is plain one-token decode,
+    c > 1 is a chunked-prefill block; cache k/v: (b, S, kv, hd); index: the
+    position of the *first* token in the block — a scalar shared by the
+    whole batch (static lock-step decode) or a per-row (b,) vector
+    (continuous batching: each slot sits at its own sequence offset). The c
+    new K/V rows land at positions index + [0, c); queries attend causally
+    within the block (position i sees keys <= index + i). Returns
+    (out (b,c,d'), new cache)."""
+    b, c = x.shape[0], x.shape[1]
     index = jnp.asarray(index, jnp.int32)
     per_slot = index.ndim == 1
-    positions = index[:, None] if per_slot else jnp.full((b, 1), index,
-                                                         jnp.int32)
+    start = index if per_slot else jnp.full((b,), index, jnp.int32)
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None]  # (b,c)
     q, k_new, v_new = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
                                    positions, rope_theta, norm_eps)
     # layout choice (EXPERIMENTS.md §Perf iter 1 + follow-up): when the kv
@@ -209,11 +212,11 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     else:
         spec = "kv_cache_decode"
     if per_slot:
-        # per-row writes: slot i appends at its own offset index[i]
-        def upd(c, new, i):
-            return jax.lax.dynamic_update_slice(c, new, (i, 0, 0))
-        k = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), index)
-        v = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), index)
+        # per-row writes: slot i appends its (c, kv, hd) block at index[i]
+        def upd(cch, new, i):
+            return jax.lax.dynamic_update_slice(cch, new, (i, 0, 0))
+        k = jax.vmap(upd)(cache["k"], k_new.astype(cache["k"].dtype), start)
+        v = jax.vmap(upd)(cache["v"], v_new.astype(cache["v"].dtype), start)
     else:
         k = jax.lax.dynamic_update_slice(
             cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
@@ -222,12 +225,13 @@ def decode_attention(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     k = constrain(k, spec)
     v = constrain(v, spec)
     s_max = k.shape[1]
-    k_pos = jnp.arange(s_max, dtype=jnp.int32)[None].repeat(b, 0)
-    valid = k_pos <= positions           # (b, s_max); per-row when per_slot
+    k_pos = jnp.arange(s_max, dtype=jnp.int32)[None, None, :]   # (1,1,s_max)
+    pos3 = positions[:, :, None]                                # (b,c,1)
+    valid = k_pos <= pos3                # (b, c, s_max); per-row validity
     w = jnp.asarray(window)
-    valid &= jnp.where(w > 0, positions - k_pos < w, True)
-    out = _sdpa(q, k, v, jnp.broadcast_to(valid[:, None, :], (b, 1, s_max)))
-    out = out.reshape(b, 1, num_heads * head_dim)
+    valid &= jnp.where(w > 0, pos3 - k_pos < w, True)
+    out = _sdpa(q, k, v, valid)
+    out = out.reshape(b, c, num_heads * head_dim)
     return proj(out, p["wo_hd"]), {"k": k, "v": v}
 
 

@@ -324,6 +324,76 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
     return logits, cache
 
 
+def token_stop_mask(tokens: jax.Array, stop_tokens: jax.Array) -> jax.Array:
+    """Per-row stop detection, on-device. tokens: (...,) int32 just-emitted
+    token ids; stop_tokens: (K,) int32 stop set (K == 0 → never stops).
+    Returns a boolean array of tokens' shape: True where the token is a
+    member of the stop set. Fixed K keeps the jitted step shape-stable —
+    the serving engine pads its stop set once at construction."""
+    stop_tokens = jnp.asarray(stop_tokens, jnp.int32)
+    if stop_tokens.ndim != 1:
+        raise ValueError(f"stop_tokens must be 1-D, got {stop_tokens.shape}")
+    if stop_tokens.shape[0] == 0:
+        return jnp.zeros(tokens.shape, bool)
+    return (tokens[..., None] == stop_tokens).any(axis=-1)
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig,
+                  cache: Dict[str, jax.Array], tokens: jax.Array,
+                  start: jax.Array,
+                  logits_index: Optional[jax.Array] = None,
+                  seq_shard: bool = False
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill: process a block of ``c`` prompt tokens at position
+    offset ``start`` against an existing cache. tokens: (B, c) int32;
+    start: the first token's position — a scalar or per-row (B,) vector.
+    The chunk's K/V land at positions start + [0, c); each query attends
+    the whole cache under per-position causal validity, so running a
+    prompt chunk-by-chunk into a compute-dtype scratch cache is
+    bit-identical to one full-prompt :func:`prefill` (masked cache entries
+    contribute exactly 0.0 — see serving.engine). Returns
+    (logits (B, V), cache) with the logits row read at in-chunk position
+    ``logits_index`` (a traced scalar; default: last position — only
+    meaningful on the chunk containing the true prompt end).
+
+    Attention-only decoders: chunk resume carries no state besides the KV
+    cache. SSM/hybrid/encoder/VLM configs are rejected here and upstream
+    by ``serving.slots.check_slot_compatible``."""
+    if cfg.block_type != "attn" or cfg.encoder_layers or cfg.vision_tokens:
+        raise NotImplementedError(
+            "chunked prefill supports attention-only decoders "
+            f"(got block_type={cfg.block_type!r})")
+    x = embed(params["embed_vd"], tokens)
+    windows = _windows(cfg)
+
+    def body(carry, inp):
+        x, = carry
+        lp, w, lc = inp
+        h = rms_norm(x, lp["ln1_d"], cfg.norm_eps)
+        out, kv = attn.decode_attention(
+            lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, start,
+            cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.rope_theta,
+            window=w, norm_eps=cfg.norm_eps, seq_shard=seq_shard)
+        x = x + out
+        ys = {"k": kv["k"], "v": kv["v"]}
+        if "ln2_d" in lp:
+            h = rms_norm(x, lp["ln2_d"], cfg.norm_eps)
+            x = x + _ffn(cfg, lp, h, {})
+        return (x,), ys
+
+    (x,), new_cache = jax.lax.scan(
+        body, (x,), (params["layers"], windows, cache),
+        unroll=cfg.num_layers if cfg.unroll_layers else 1)
+    x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
+    table = params["embed_vd"] if cfg.tie_embeddings else params["unembed_vd"]
+    if logits_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+    logits = _vocab_mask(cfg, unembed(table, x_last))[:, 0]
+    return logits, new_cache
+
+
 def decode_step(params: Params, cfg: ModelConfig,
                 cache: Dict[str, jax.Array], token: jax.Array,
                 index: jax.Array, seq_shard: bool = False

@@ -1,0 +1,639 @@
+"""JetStream-style serving engine facade: prefill / insert / generate.
+
+The :class:`ServingEngine` is the production API over the continuous-
+batching machinery: callers speak in three verbs and never touch slots,
+caches, or compiled step functions directly —
+
+  * ``prefill(tokens) -> Prefix`` — run the prompt through the model and
+    return its KV block plus the greedy first token. Long prompts split
+    into fixed-size chunks (``prefill_chunk=C``) so a 4k-token prompt
+    interleaves with decode instead of stalling every active slot; with a
+    prefix cache, requests sharing a system prompt reuse its KV instead
+    of re-running prefill.
+  * ``insert(prefix, state) -> (state, view)`` — claim a slot and scatter
+    the Prefix KV into the slot cache (one compiled masked scatter for
+    every admission).
+  * ``generate(state) -> (state, result)`` — one fused decode dispatch
+    over all occupied slots: every slot steps at its own offset, stop
+    tokens are detected *on-device*, and finished slots retire the step
+    their sequence ends.
+
+Production semantics underneath:
+
+  content-dependent stopping — the decode step computes a per-slot stop
+  mask (``lm.token_stop_mask`` over the engine's EOS + stop-token set) in
+  the compiled graph, so a fused multi-step window can freeze a finished
+  row immediately without a host round-trip.
+
+  chunked prefill — chunks run through ``lm.prefill_chunk`` into a
+  scratch KV cache held in the *compute* dtype and sized exactly
+  ``prompt_pad``, with chunk starts clamped to ``P - C`` (clamped chunks
+  recompute a deterministic overlap). Both choices are load-bearing for
+  bit-identity with single-shot prefill: the attention reduction length
+  stays P in every chunk (XLA's reduction order is size-dependent, so a
+  longer scratch would perturb the last ulp), and masked entries
+  contribute exactly 0.0.
+
+  shared-prefix KV reuse — a content-hashed :class:`PrefixCache`: exact
+  full-prompt hits skip prefill entirely; shared-prefix hits seed the
+  scratch and only the tail chunks run (``Request.shared_prefix_len``
+  marks the boundary).
+
+  masked-scan decode window — ``generate(max_steps=w)`` with w > 1 runs
+  one fixed-length ``lax.scan`` (compile-once) where each step applies a
+  per-slot validity mask ``~done & (i < w) & budget-left``: ragged tails
+  and mid-window stops stay fused instead of falling back to
+  single-stepping. Frozen rows re-feed their last token at their last
+  position — a deterministic identical KV rewrite, so the cache stays
+  bit-exact.
+
+Every compiled function is traced exactly once per engine (fixed shapes;
+``prefill_traces`` / ``decode_traces`` / ``insert_traces`` count
+retraces, and the PR-7 sanitizer's compile sentinel asserts it at run
+time under ``serve --sanitize``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serving import slots as slots_mod
+from repro.serving.prefix import Prefix, PrefixCache, PrefixEntry, token_key
+
+
+@dataclasses.dataclass
+class SlotView:
+    """Host-side view of one in-flight request (the engine's record of a
+    slot between ``insert`` and retirement)."""
+
+    request_id: Hashable
+    slot: int
+    prompt_len: int
+    pos: int                     # next cache write position
+    tokens: List[int]            # generated so far (index 0 from prefill)
+    max_new_tokens: int
+    done: bool = False
+    stop_reason: Optional[str] = None   # "eos" | "stop_token" | "budget"
+
+    @property
+    def budget_left(self) -> int:
+        return self.max_new_tokens - len(self.tokens)
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Everything traffic-dependent: the slot cache, the allocator, and
+    the per-slot views. The engine itself stays request-free, so one
+    engine serves many independent runs."""
+
+    cache: Any
+    alloc: slots_mod.SlotAllocator
+    slots: Dict[int, SlotView]
+
+    @property
+    def num_free(self) -> int:
+        return self.alloc.num_free
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One emitted token inside a ``generate`` call, in deterministic
+    step-major / slot-minor order. ``step_offset`` is the 0-based decode
+    iteration within the dispatched window that produced it."""
+
+    request_id: Hashable
+    slot: int
+    token: int
+    index: int                   # position within the generated sequence
+    step_offset: int
+
+
+@dataclasses.dataclass
+class StepResult:
+    """Outcome of one ``generate`` dispatch."""
+
+    events: List[TokenEvent]
+    finished: List[Tuple[SlotView, int]]  # (retired view, last step_offset)
+    steps: int                   # decode iterations dispatched (window len)
+
+
+class PrefillTask:
+    """Host-side cursor for one (possibly chunked) prefill. Created by
+    ``start_prefill``; ``prefill_step`` advances it one compiled call at
+    a time so the scheduler can interleave prompt chunks with decode
+    steps. ``prefix`` is set once ``finished``."""
+
+    def __init__(self, tokens: np.ndarray, shared_prefix_len: int = 0):
+        self.tokens = np.asarray(tokens, np.int32).reshape(-1)
+        self.length = int(self.tokens.shape[0])
+        self.shared_prefix_len = shared_prefix_len
+        self.key = token_key(self.tokens)
+        self.prefix: Optional[Prefix] = None
+        # chunked-mode cursor state (filled in by the engine)
+        self.scratch: Any = None
+        self.phases: List[Tuple[np.ndarray, List[int]]] = []
+        self.cursor = (0, 0)                 # (phase, chunk-within-phase)
+        self.prefix_key: Optional[str] = None  # snapshot after phase 0
+
+    @property
+    def finished(self) -> bool:
+        return self.prefix is not None
+
+
+class ServingEngine:
+    """The serving facade. One instance binds params + config + slot
+    geometry and owns every compiled step function; traffic lives in
+    :class:`DecodeState` objects created by :meth:`init_state`."""
+
+    def __init__(self, params, cfg: ModelConfig, num_slots: int,
+                 prompt_pad: int, max_len: int,
+                 cache_dtype=jnp.bfloat16, sync_every: int = 1,
+                 stop_tokens: Sequence[int] = (),
+                 eos_token: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache_capacity: int = 0,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 sanitizer=None):
+        slots_mod.check_slot_compatible(cfg)
+        if prompt_pad > max_len:
+            raise ValueError(f"prompt_pad={prompt_pad} exceeds "
+                             f"max_len={max_len}")
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            prefill_chunk = min(prefill_chunk, prompt_pad)
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.prompt_pad = prompt_pad
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.sync_every = sync_every
+        self.prefill_chunk = prefill_chunk
+        self.eos_token = int(eos_token) if eos_token is not None else None
+        self._user_stops = {int(t) for t in stop_tokens}
+        stop_set = set(self._user_stops)
+        if self.eos_token is not None:
+            stop_set.add(self.eos_token)
+        self._stop_set = stop_set
+        # fixed-size device-side stop set: (K,) with K == 0 meaning
+        # stopping is budget-only (token_stop_mask returns all-False)
+        self._stop_arr = jnp.asarray(sorted(stop_set), jnp.int32)
+        self.prefix_cache = (PrefixCache(prefix_cache_capacity)
+                             if prefix_cache_capacity else None)
+        # scratch/prefill compute dtype: the model dtype, so chunked
+        # attention reads exactly the values single-shot prefill computes
+        self._compute_dtype = params["embed_vd"].dtype
+        # duck-typed repro.analysis.sanitize.Sanitizer; its decode_guard()
+        # wraps each steady-state generate dispatch
+        self.sanitizer = sanitizer
+        self.mesh = mesh
+        self._slot_spec = self._vec_spec = None
+        if mesh is not None:
+            from jax.sharding import PartitionSpec
+            dp_axes = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names)
+            dp = int(np.prod([mesh.shape[a] for a in dp_axes])) \
+                if dp_axes else 1
+            if dp > 1 and num_slots % dp == 0:
+                self._slot_spec = PartitionSpec(None, dp_axes)
+                self._vec_spec = PartitionSpec(dp_axes)
+            else:
+                self._slot_spec = PartitionSpec()
+                self._vec_spec = PartitionSpec()
+        self.prefill_traces = 0
+        self.insert_traces = 0
+        self.decode_traces = 0
+        self._build_step_fns()
+
+    # ------------------------------------------------------------------
+    # mesh placement (pure placement: numerics-preserving)
+    # ------------------------------------------------------------------
+    def _place_cache(self, cache):
+        """Place slot-cache leaves on the mesh: slot axis (dim 1) over
+        the data axes, everything else replicated. No-op without a
+        mesh."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def put(leaf):
+            spec = (self._slot_spec
+                    if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots
+                    else PartitionSpec())
+            return jax.device_put(leaf, NamedSharding(self.mesh, spec))
+
+        return jax.tree_util.tree_map(put, cache)
+
+    def _place_vec(self, vec):
+        """Place a per-slot (S,) or (S, 1) host vector on the mesh.
+
+        Explicit ``jax.device_put`` (not ``jnp.asarray``) so per-step
+        placement stays legal under ``jax.transfer_guard("disallow")``
+        when a sanitizer arms the decode window."""
+        if self.mesh is None:
+            return jax.device_put(vec)
+        from jax.sharding import NamedSharding
+        return jax.device_put(vec, NamedSharding(self.mesh,
+                                                 self._vec_spec))
+
+    # ------------------------------------------------------------------
+    # compiled step functions (each traced exactly once)
+    # ------------------------------------------------------------------
+    def _build_step_fns(self) -> None:
+        cfg, pad = self.cfg, self.prompt_pad
+        stop_arr = self._stop_arr
+
+        def prefill(params, toks, length):
+            # trace-time side effect: counts retraces, not executions
+            self.prefill_traces += 1
+            logits, pcache = lm.prefill(
+                params, cfg, {"tokens": toks}, max_len=pad,
+                cache_dtype=self.cache_dtype, logits_index=length - 1)
+            tok0 = jnp.argmax(logits, -1).astype(jnp.int32)[0]
+            return tok0, {"k": pcache["k"], "v": pcache["v"]}
+
+        def prefill_chunk(params, scratch, toks, start, logits_index):
+            self.prefill_traces += 1
+            logits, scratch = lm.prefill_chunk(
+                params, cfg, scratch, toks, start,
+                logits_index=logits_index)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[0]
+            return tok, scratch
+
+        def insert(cache, k, v, slot, length):
+            self.insert_traces += 1
+            return slots_mod.write_prefill(cache, {"k": k, "v": v}, slot,
+                                           length)
+
+        def decode(params, cache, toks, pos):
+            self.decode_traces += 1
+            logits, cache = lm.decode_step(params, cfg, cache, toks, pos)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return nxt, lm.token_stop_mask(nxt, stop_arr), cache
+
+        def decode_window(params, cache, toks, pos, done, left, window_len):
+            # sync_every > 1: a fixed-length window of fused decode steps
+            # runs on-device between host syncs. Per-slot masking keeps
+            # ragged tails fused: step i only advances rows that are not
+            # done, still inside the requested window, and under budget;
+            # frozen rows recompute their previous step verbatim (same
+            # token, same position -> bit-identical KV rewrite). Stop
+            # tokens flip ``done`` the step they are emitted, so nothing
+            # after a stop token is ever marked valid.
+            self.decode_traces += 1
+
+            def body(carry, i):
+                toks, cache, pos, done, left = carry
+                logits, cache = lm.decode_step(params, cfg, cache, toks,
+                                               pos)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                active = (~done) & (i < window_len)
+                stop = lm.token_stop_mask(nxt, stop_arr)
+                left = jnp.where(active, left - 1, left)
+                done = done | (active & (stop | (left <= 0)))
+                toks = jnp.where(active[:, None], nxt[:, None], toks)
+                pos = jnp.where(active, pos + 1, pos)
+                return (toks, cache, pos, done, left), (nxt, active)
+
+            (_, cache, _, done, _), (toks_seq, valid_seq) = jax.lax.scan(
+                body, (toks, cache, pos, done, left),
+                jnp.arange(self.sync_every, dtype=jnp.int32))
+            return toks_seq, valid_seq, cache
+
+        # donate the slot cache: callers always rebind it to the returned
+        # value, so XLA updates the KV buffers in place instead of
+        # copying the whole (L, S, max_len, kv, hd) cache every step.
+        # The chunk fn does NOT donate its scratch: prefix-cache entries
+        # alias scratch snapshots and must outlive later chunks.
+        self._prefill_fn = jax.jit(prefill)
+        self._chunk_fn = jax.jit(prefill_chunk)
+        self._insert_fn = jax.jit(insert, donate_argnums=(0,))
+        self._decode_fn = jax.jit(decode, donate_argnums=(1,))
+        self._window_fn = (jax.jit(decode_window, donate_argnums=(1,))
+                           if self.sync_every > 1 else None)
+
+    # ------------------------------------------------------------------
+    # state + warmup
+    # ------------------------------------------------------------------
+    def init_state(self) -> DecodeState:
+        """Fresh traffic state: zeroed slot cache (mesh-placed), empty
+        allocator, no views."""
+        cache = self._place_cache(
+            slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                      self.max_len, self.cache_dtype))
+        return DecodeState(cache=cache,
+                           alloc=slots_mod.SlotAllocator(self.num_slots),
+                           slots={})
+
+    def _init_scratch(self):
+        """Chunked-prefill scratch KV: compute dtype, length exactly
+        ``prompt_pad`` (see module docstring on why the length matters
+        for bit-identity)."""
+        return lm.init_cache(self.cfg, 1, self.prompt_pad,
+                             dtype=self._compute_dtype)
+
+    def warmup(self) -> None:
+        """Compile every step function this engine will use outside any
+        timed window, against throwaway buffers."""
+        cache = self._place_cache(
+            slots_mod.init_slot_cache(self.cfg, self.num_slots,
+                                      self.max_len, self.cache_dtype))
+        if self.prefill_chunk is not None:
+            scratch = self._init_scratch()
+            tok0, scratch = self._chunk_fn(
+                self.params, scratch,
+                jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                jnp.int32(0), jnp.int32(0))
+            kv = {"k": scratch["k"], "v": scratch["v"]}
+        else:
+            tok0, kv = self._prefill_fn(
+                self.params, jnp.zeros((1, self.prompt_pad), jnp.int32),
+                jnp.int32(1))
+        cache = self._insert_fn(cache, kv["k"], kv["v"], jnp.int32(0),
+                                jnp.int32(1))
+        tok_vec = self._place_vec(np.zeros((self.num_slots, 1), np.int32))
+        pos_vec = self._place_vec(np.zeros((self.num_slots,), np.int32))
+        nxt, stops, cache = self._decode_fn(self.params, cache, tok_vec,
+                                            pos_vec)
+        if self._window_fn is not None:
+            done = self._place_vec(np.zeros((self.num_slots,), bool))
+            left = self._place_vec(
+                np.full((self.num_slots,), self.sync_every, np.int32))
+            toks_seq, valid_seq, cache = self._window_fn(
+                self.params, cache,
+                self._place_vec(np.zeros((self.num_slots, 1), np.int32)),
+                pos_vec, done, left,
+                jax.device_put(np.int32(self.sync_every)))
+            jax.block_until_ready(toks_seq)
+        jax.block_until_ready((tok0, nxt))
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def _chunk_starts(self, plen: int, tail_from: int = 0) -> List[int]:
+        """Chunk-start grid covering positions [tail_from, plen). Starts
+        clamp to P - C so the fixed-shape chunk never writes past the
+        scratch; a clamped chunk recomputes a deterministic overlap."""
+        C, P = self.prefill_chunk, self.prompt_pad
+        starts: List[int] = []
+        s = tail_from
+        while True:
+            s_eff = min(s, P - C)
+            starts.append(s_eff)
+            if s_eff + C >= plen:
+                return starts
+            s = s_eff + C
+
+    def start_prefill(self, tokens, shared_prefix_len: int = 0
+                      ) -> PrefillTask:
+        """Begin a prefill. Returns a task whose remaining work is a
+        sequence of ``prefill_step`` calls (exactly one compiled call
+        each) — the scheduler interleaves them with decode steps.
+        Full-prompt cache hits finish in a single free ``prefill_step``.
+
+        ``shared_prefix_len`` marks a shared-prefix boundary (e.g. the
+        system prompt length). It only enables KV reuse when both the
+        prefix cache and chunked prefill are on; otherwise it is
+        ignored (exact full-prompt caching still applies)."""
+        task = PrefillTask(tokens, shared_prefix_len)
+        plen = task.length
+        if not (1 <= plen <= self.prompt_pad):
+            raise ValueError(f"prompt length {plen} not in "
+                             f"[1, {self.prompt_pad}]")
+        if self.prefix_cache is not None:
+            entry = self.prefix_cache.get(task.key)
+            if entry is not None and entry.kind == "full" \
+                    and entry.length == plen:
+                # exact full-prompt hit: no compute at all; the task
+                # finishes on its first (free) prefill_step
+                task.prefix = Prefix(length=plen,
+                                     first_token=int(entry.first_token),
+                                     kv=entry.kv, key=task.key,
+                                     from_cache=True)
+                return task
+        if self.prefill_chunk is None:
+            return task
+        C = self.prefill_chunk
+        padded = np.zeros((self.prompt_pad,), np.int32)
+        padded[:plen] = task.tokens
+        m = min(max(int(shared_prefix_len), 0), plen - 1)
+        task.scratch = self._init_scratch()
+        if self.prefix_cache is not None and m > 0:
+            pkey = token_key(task.tokens[:m])
+            entry = self.prefix_cache.get(pkey)
+            if entry is not None and entry.length == m:
+                # shared-prefix hit: seed the scratch, run only the tail
+                task.scratch = {"k": entry.kv["k"], "v": entry.kv["v"]}
+                task.phases = [(padded, self._chunk_starts(plen, m))]
+                return task
+            # miss: phase 0 prefills tokens[:m] alone (pad beyond m, so
+            # the snapshot is tail-independent and reusable), phase 1
+            # resumes at m with this request's real tail
+            prefix_padded = np.zeros((self.prompt_pad,), np.int32)
+            prefix_padded[:m] = task.tokens[:m]
+            pstarts = [s for s in self._chunk_starts(m) if s < m]
+            task.phases = [(prefix_padded, pstarts),
+                           (padded, self._chunk_starts(plen, m))]
+            task.prefix_key = pkey
+            return task
+        task.phases = [(padded, self._chunk_starts(plen))]
+        return task
+
+    def prefill_step(self, task: PrefillTask) -> bool:
+        """Advance ``task`` by one unit of prefill work (at most one
+        compiled call). Returns True when the task finished and
+        ``task.prefix`` is available."""
+        if task.finished:
+            return True
+        plen = task.length
+        if self.prefill_chunk is None:
+            padded = np.zeros((1, self.prompt_pad), np.int32)
+            padded[0, :plen] = task.tokens
+            tok0, kv = self._prefill_fn(self.params, jnp.asarray(padded),
+                                        jnp.int32(plen))
+            task.prefix = Prefix(length=plen,
+                                 first_token=int(jax.device_get(tok0)),
+                                 kv=kv, key=task.key)
+        else:
+            phase, idx = task.cursor
+            toks, starts = task.phases[phase]
+            start = starts[idx]
+            blk = toks[None, start:start + self.prefill_chunk]
+            last = (phase == len(task.phases) - 1 and
+                    idx == len(starts) - 1)
+            li = (plen - 1) - start if last else 0
+            tok, task.scratch = self._chunk_fn(
+                self.params, task.scratch, jnp.asarray(blk),
+                jnp.int32(start), jnp.int32(li))
+            if idx + 1 < len(starts):
+                task.cursor = (phase, idx + 1)
+            else:
+                if phase + 1 < len(task.phases):
+                    # phase boundary: snapshot the shared prefix for reuse
+                    if task.prefix_key is not None \
+                            and self.prefix_cache is not None:
+                        self.prefix_cache.put(task.prefix_key, PrefixEntry(
+                            kind="prefix", length=task.shared_prefix_len,
+                            kv={"k": task.scratch["k"],
+                                "v": task.scratch["v"]}))
+                    task.cursor = (phase + 1, 0)
+                else:
+                    kv = {"k": task.scratch["k"], "v": task.scratch["v"]}
+                    task.prefix = Prefix(
+                        length=plen,
+                        first_token=int(jax.device_get(tok)),
+                        kv=kv, key=task.key)
+        if task.finished and self.prefix_cache is not None \
+                and not task.prefix.from_cache:
+            self.prefix_cache.put(task.key, PrefixEntry(
+                kind="full", length=plen,
+                first_token=task.prefix.first_token, kv=task.prefix.kv))
+        return task.finished
+
+    def prefill(self, tokens, shared_prefix_len: int = 0,
+                params=None) -> Prefix:
+        """Facade verb: run a whole prompt (all chunks) and return its
+        :class:`Prefix`. ``params`` defaults to the engine's params (the
+        compiled functions accept any params of the same structure)."""
+        if params is not None and params is not self.params:
+            saved, self.params = self.params, params
+            try:
+                return self.prefill(tokens, shared_prefix_len)
+            finally:
+                self.params = saved
+        task = self.start_prefill(tokens, shared_prefix_len)
+        while not self.prefill_step(task):
+            pass
+        return task.prefix
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+    def insert(self, prefix: Prefix, state: DecodeState,
+               max_new_tokens: int, request_id: Hashable = None,
+               slot: Optional[int] = None
+               ) -> Tuple[DecodeState, SlotView]:
+        """Claim a slot (or fill a pre-reserved one) and scatter the
+        Prefix KV into its row. The Prefix's first token counts as
+        generation index 0; if it is a stop token — or the budget is a
+        single token — the request is already complete and the slot is
+        released before any decode step runs."""
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prefix.length + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt {prefix.length} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_len={self.max_len}")
+        if slot is None:
+            slot = state.alloc.alloc(request_id)
+            if slot is None:
+                raise RuntimeError("no free slot; call generate() until "
+                                   "one retires")
+        state.cache = self._insert_fn(state.cache, prefix.kv["k"],
+                                      prefix.kv["v"], jnp.int32(slot),
+                                      jnp.int32(prefix.length))
+        view = SlotView(request_id=request_id, slot=slot,
+                        prompt_len=prefix.length, pos=prefix.length,
+                        tokens=[int(prefix.first_token)],
+                        max_new_tokens=max_new_tokens)
+        reason = self._classify(view.tokens[0])
+        if reason is not None or max_new_tokens == 1:
+            view.done = True
+            view.stop_reason = reason or "budget"
+            state.alloc.free(slot)
+        else:
+            state.slots[slot] = view
+        return state, view
+
+    def _classify(self, token: int) -> Optional[str]:
+        """Host-side stop classification; membership agrees exactly with
+        the on-device ``token_stop_mask`` set."""
+        if self.eos_token is not None and token == self.eos_token:
+            return "eos"
+        if token in self._user_stops:
+            return "stop_token"
+        return None
+
+    # ------------------------------------------------------------------
+    # generate
+    # ------------------------------------------------------------------
+    def generate(self, state: DecodeState,
+                 max_steps: Optional[int] = None
+                 ) -> Tuple[DecodeState, StepResult]:
+        """One decode dispatch over every occupied slot. ``max_steps``
+        caps the fused window (clamped to ``sync_every``; default: as
+        many steps as the engine may fuse). Slots whose sequences finish
+        — stop token emitted or budget exhausted — are retired and their
+        slots freed before this returns."""
+        active = state.slots
+        if not active:
+            return state, StepResult(events=[], finished=[], steps=0)
+        w = self.sync_every if max_steps is None else max(1, min(
+            int(max_steps), self.sync_every))
+        tok_vec = np.zeros((self.num_slots, 1), np.int32)
+        pos_vec = np.zeros((self.num_slots,), np.int32)
+        done_vec = np.ones((self.num_slots,), bool)
+        left_vec = np.zeros((self.num_slots,), np.int32)
+        for slot, view in active.items():
+            tok_vec[slot, 0] = view.tokens[-1]
+            pos_vec[slot] = view.pos
+            done_vec[slot] = False
+            left_vec[slot] = view.budget_left
+        # steady state: placement is explicit (device_put), the dispatch
+        # runs under the sanitizer's transfer guard (when armed), and the
+        # result comes back through an explicit device_get — no implicit
+        # transfer anywhere
+        tok_dev = self._place_vec(tok_vec)
+        pos_dev = self._place_vec(pos_vec)
+        guard = (self.sanitizer.decode_guard()
+                 if self.sanitizer is not None
+                 else contextlib.nullcontext())
+        if w > 1 and self._window_fn is not None:
+            done_dev = self._place_vec(done_vec)
+            left_dev = self._place_vec(left_vec)
+            wlen_dev = jax.device_put(np.int32(w))
+            with guard:
+                toks_dev, valid_dev, state.cache = self._window_fn(
+                    self.params, state.cache, tok_dev, pos_dev,
+                    done_dev, left_dev, wlen_dev)
+            toks_seq, valid_seq = jax.device_get((toks_dev, valid_dev))
+        else:
+            w = 1
+            with guard:
+                nxt_dev, stop_dev, state.cache = self._decode_fn(
+                    self.params, state.cache, tok_dev, pos_dev)
+            nxt, _ = jax.device_get((nxt_dev, stop_dev))
+            toks_seq = nxt[None]
+            valid_seq = ~done_vec[None]
+        events: List[TokenEvent] = []
+        finished: List[Tuple[SlotView, int]] = []
+        for i in range(w):           # step-major: sync_every=1 ordering
+            for slot in sorted(active):
+                view = active[slot]
+                if view.done or not valid_seq[i, slot]:
+                    continue
+                tok = int(toks_seq[i, slot])
+                view.tokens.append(tok)
+                view.pos += 1
+                events.append(TokenEvent(
+                    request_id=view.request_id, slot=slot, token=tok,
+                    index=len(view.tokens) - 1, step_offset=i))
+                reason = self._classify(tok)
+                if reason is not None or view.budget_left == 0:
+                    view.done = True
+                    view.stop_reason = reason or "budget"
+                    finished.append((view, i))
+        for view, _ in finished:
+            del state.slots[view.slot]
+            state.alloc.free(view.slot)
+        return state, StepResult(events=events, finished=finished, steps=w)

@@ -5,41 +5,51 @@ optical arrays once (``engine.program``) and pay for themselves under
 sustained traffic. This scheduler supplies that traffic shape — requests
 with heterogeneous arrival times, prompt lengths, and generation lengths
 stream through a *fixed pool of decode slots*, so activations keep moving
-past the same stationary plans with no idle lock-step barrier:
+past the same stationary plans with no idle lock-step barrier.
 
-  * admission: a ready request claims a free slot; its prompt is
-    right-padded to a fixed length and prefilled (one compiled prefill
-    serves every admission), and its KV lands in the slot's row of the
-    slot-indexed cache via a masked scatter.
-  * decode: one compiled step decodes *all* occupied slots at their own
-    sequence offsets (per-row index vector) — newly admitted requests
-    interleave with in-flight ones in the same batch. With
-    ``sync_every=k`` the scheduler batches k fused decode steps on-device
-    (``lax.scan``) between host syncs whenever control flow provably
-    cannot intervene (no mid-window retirement or admission), cutting the
-    per-step host round-trip for small models without changing a single
-    token or any latency accounting.
-  * retirement: a finished sequence frees its slot immediately; the next
-    ready request refills it without retriggering compilation (every step
-    function sees fixed shapes — slot ids and lengths are traced values).
+The device-facing machinery lives in :class:`repro.serving.engine.
+ServingEngine` (the JetStream-style prefill / insert / generate facade);
+the scheduler is pure policy on top of those verbs:
+
+  * admission: a ready request claims a free slot; its prompt runs
+    through ``engine.start_prefill`` / ``prefill_step`` — one compiled
+    call per scheduler iteration, so with chunked prefill a long prompt
+    interleaves with decode instead of stalling every active slot — and
+    ``engine.insert`` scatters its KV into the slot row. With a prefix
+    cache, full-prompt or shared-prefix hits skip the recomputation.
+  * decode: one ``engine.generate`` dispatch steps *all* occupied slots
+    at their own sequence offsets. With ``sync_every=k`` up to k fused
+    steps run on-device between host syncs; per-slot masking inside the
+    fused window keeps ragged tails (windows shorter than k, slots
+    stopping mid-window) in the compiled ``lax.scan`` path.
+  * retirement: the engine retires a slot the step its sequence finishes
+    — trace budget exhausted or a stop token emitted (detected
+    on-device) — and the next ready request refills it without
+    retriggering compilation.
 
 Token-level semantics are identical to the static path: the first
 generated token comes from the prefill logits, token ``g`` (g >= 1) from
 a decode at position ``prompt_len + g - 1``. On exact substrates the
 produced tokens are bit-identical to a static ``prefill`` +
-``decode_step`` run of the same request (tested).
+``decode_step`` run of the same request (tested), including under
+chunked prefill and prefix-cache hits.
 
 The scheduler clock is virtual — one decode step advances time by 1.0 —
 so latency accounting (TTFT, per-request latency) is deterministic and
-trace-replayable; wall-clock throughput is reported alongside.
+trace-replayable; wall-clock throughput is reported alongside. In
+budget-only mode the window policy provably never retires a slot
+mid-window or skips an admission opportunity, so all virtual accounting
+is independent of ``sync_every``. With stop tokens, a slot may stop
+mid-window while a request waits — TTFT can shift by at most
+``sync_every - 1`` steps against single-stepping (the usual multi-step
+scheduling trade).
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, Hashable, List, Optional, Sequence
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +57,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serving import slots as slots_mod
+from repro.serving.engine import PrefillTask, ServingEngine, SlotView
 from repro.serving.stream import Completion, StreamCallbacks, TokenCollector
 
 
@@ -57,17 +67,11 @@ class Request:
 
     request_id: Hashable
     tokens: np.ndarray           # (prompt_len,) int32 prompt tokens
-    max_new_tokens: int
+    max_new_tokens: int          # generation budget (stop tokens may end
+    #                              the sequence earlier)
     arrival: float = 0.0         # virtual-clock arrival time (steps)
-
-
-@dataclasses.dataclass
-class _InFlight:
-    req: Request
-    slot: int
-    admit_step: float
-    tokens: List[int]            # generated so far (index 0 from prefill)
-    pos: int                     # next cache write position (= prompt + g)
+    shared_prefix_len: int = 0   # shared-prefix boundary (e.g. system
+    #                              prompt length) for prefix-cache reuse
 
 
 @dataclasses.dataclass
@@ -89,12 +93,18 @@ def _percentiles(values: Sequence[float]) -> Dict[str, float]:
 
 
 def poisson_trace(n: int, rate: float, prompt_lens: Sequence[int],
-                  gen_lens: Sequence[int], vocab: int, seed: int = 0
-                  ) -> List[Request]:
+                  gen_lens: Sequence[int], vocab: int, seed: int = 0,
+                  shared_prefix_len: int = 0) -> List[Request]:
     """Synthetic Poisson arrival trace with mixed prompt/generation
     lengths (exponential inter-arrivals at ``rate`` requests per step;
-    ``rate <= 0`` means everything arrives at t=0 — a burst)."""
+    ``rate <= 0`` means everything arrives at t=0 — a burst).
+
+    ``shared_prefix_len > 0`` prepends one common random prefix of that
+    length to every prompt (the shared-system-prompt traffic shape) and
+    stamps the boundary on each request for prefix-cache reuse."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=(shared_prefix_len,)).astype(
+        np.int32) if shared_prefix_len > 0 else None
     t = 0.0
     out = []
     for i in range(n):
@@ -103,8 +113,10 @@ def poisson_trace(n: int, rate: float, prompt_lens: Sequence[int],
         plen = int(rng.choice(np.asarray(prompt_lens)))
         glen = int(rng.choice(np.asarray(gen_lens)))
         toks = rng.integers(0, vocab, size=(plen,)).astype(np.int32)
+        if prefix is not None:
+            toks = np.concatenate([prefix, toks])
         out.append(Request(request_id=i, tokens=toks, max_new_tokens=glen,
-                           arrival=t))
+                           arrival=t, shared_prefix_len=shared_prefix_len))
     return out
 
 
@@ -114,7 +126,8 @@ def static_generate(params, cfg: ModelConfig, tokens: np.ndarray,
     """Straight static-batch reference for one request: unpadded prefill
     + lock-step ``decode_step`` (the launch/serve.py loop, batch 1). The
     continuous scheduler must reproduce these tokens bit-for-bit on exact
-    substrates."""
+    substrates (truncated at the first stop token, when stopping is
+    content-dependent)."""
     toks = jnp.asarray(tokens, jnp.int32)[None]
     plen = int(toks.shape[1])
     logits, cache = lm.prefill(params, cfg, {"tokens": toks},
@@ -136,10 +149,10 @@ def static_generate(params, cfg: ModelConfig, tokens: np.ndarray,
 class ContinuousScheduler:
     """Iteration-level scheduler: admit -> decode -> retire, forever.
 
-    The two step functions are compiled once per scheduler instance
-    (fixed shapes: prompts padded to ``prompt_pad``, decode batch =
-    ``num_slots``); ``prefill_traces`` / ``decode_traces`` count actual
-    retraces so tests and benchmarks can assert compile-once behaviour.
+    Every compiled step function is built (and traced exactly once) by
+    the owned :class:`ServingEngine`; ``prefill_traces`` /
+    ``decode_traces`` proxy its retrace counters so tests and benchmarks
+    can assert compile-once behaviour.
     """
 
     def __init__(self, params, cfg: ModelConfig, num_slots: int,
@@ -147,15 +160,20 @@ class ContinuousScheduler:
                  max_prefills_per_step: int = 1,
                  cache_dtype=jnp.bfloat16, sync_every: int = 1,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 sanitizer=None):
-        slots_mod.check_slot_compatible(cfg)
-        if prompt_pad > max_len:
-            raise ValueError(f"prompt_pad={prompt_pad} exceeds "
-                             f"max_len={max_len}")
+                 sanitizer=None,
+                 stop_tokens: Sequence[int] = (),
+                 eos_token: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: int = 0):
         if max_prefills_per_step < 1:
             raise ValueError("max_prefills_per_step must be >= 1")
-        if sync_every < 1:
-            raise ValueError("sync_every must be >= 1")
+        self.engine = ServingEngine(
+            params, cfg, num_slots=num_slots, prompt_pad=prompt_pad,
+            max_len=max_len, cache_dtype=cache_dtype,
+            sync_every=sync_every, stop_tokens=stop_tokens,
+            eos_token=eos_token, prefill_chunk=prefill_chunk,
+            prefix_cache_capacity=prefix_cache, mesh=mesh,
+            sanitizer=sanitizer)
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -164,132 +182,24 @@ class ContinuousScheduler:
         self.max_prefills_per_step = max_prefills_per_step
         self.cache_dtype = cache_dtype
         self.sync_every = sync_every
-        # duck-typed repro.analysis.sanitize.Sanitizer (kept untyped so
-        # the scheduler never imports the analysis layer); its
-        # decode_guard() wraps each steady-state decode dispatch
-        self.sanitizer = sanitizer
-        # Device mesh: plans inside ``params`` carry their own sharding
-        # (engine.shard_plan_tree); the scheduler's job is placing the
-        # slot cache and per-step token/position vectors. Slots split
-        # over the data axes when the count divides (decode rows are
-        # independent, so the split is numerics-preserving); otherwise
-        # everything is replicated and the model axis still does the
-        # tensor-parallel work inside each matmul.
         self.mesh = mesh
-        self._slot_spec = self._vec_spec = None
-        if mesh is not None:
-            from jax.sharding import PartitionSpec
-            dp_axes = tuple(a for a in ("pod", "data")
-                            if a in mesh.axis_names)
-            dp = int(np.prod([mesh.shape[a] for a in dp_axes])) \
-                if dp_axes else 1
-            if dp > 1 and num_slots % dp == 0:
-                self._slot_spec = PartitionSpec(None, dp_axes)
-                self._vec_spec = PartitionSpec(dp_axes)
-            else:
-                self._slot_spec = PartitionSpec()
-                self._vec_spec = PartitionSpec()
-        self.prefill_traces = 0
-        self.decode_traces = 0
-        self._build_step_fns()
+        self.sanitizer = sanitizer
+        self.prefill_chunk = self.engine.prefill_chunk
 
-    # ------------------------------------------------------------------
-    def _place_cache(self, cache):
-        """Place slot-cache leaves on the mesh: slot axis (dim 1) over
-        the data axes, everything else replicated. No-op without a
-        mesh."""
-        if self.mesh is None:
-            return cache
-        from jax.sharding import NamedSharding, PartitionSpec
+    @property
+    def prefill_traces(self) -> int:
+        return self.engine.prefill_traces
 
-        def put(leaf):
-            spec = (self._slot_spec
-                    if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots
-                    else PartitionSpec())
-            return jax.device_put(leaf, NamedSharding(self.mesh, spec))
-
-        return jax.tree_util.tree_map(put, cache)
-
-    def _place_vec(self, vec):
-        """Place a per-slot (S,) or (S, 1) host vector on the mesh.
-
-        Explicit ``jax.device_put`` (not ``jnp.asarray``) so per-step
-        placement stays legal under ``jax.transfer_guard("disallow")``
-        when a sanitizer arms the decode window."""
-        if self.mesh is None:
-            return jax.device_put(vec)
-        from jax.sharding import NamedSharding
-        return jax.device_put(vec, NamedSharding(self.mesh,
-                                                 self._vec_spec))
-
-    # ------------------------------------------------------------------
-    def _build_step_fns(self) -> None:
-        cfg, pad = self.cfg, self.prompt_pad
-
-        def admit(params, cache, toks, length, slot):
-            # trace-time side effect: counts retraces, not executions
-            self.prefill_traces += 1
-            logits, pcache = lm.prefill(
-                params, cfg, {"tokens": toks}, max_len=pad,
-                cache_dtype=self.cache_dtype, logits_index=length - 1)
-            cache = slots_mod.write_prefill(cache, pcache, slot, length)
-            return jnp.argmax(logits, -1).astype(jnp.int32)[0], cache
-
-        def decode(params, cache, toks, pos):
-            self.decode_traces += 1
-            logits, cache = lm.decode_step(params, cfg, cache, toks, pos)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-        def decode_window(params, cache, toks, pos):
-            # sync_every > 1: run a fixed-length window of fused decode
-            # steps on-device between host syncs — each step feeds its
-            # own argmax back as the next input, so only the final
-            # (sync_every, S) token block crosses to the host. One extra
-            # trace (the scan body retraces decode once).
-            self.decode_traces += 1
-
-            def body(carry, _):
-                toks, cache, pos = carry
-                logits, cache = lm.decode_step(params, cfg, cache, toks,
-                                               pos)
-                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-                return (nxt[:, None], cache, pos + 1), nxt
-
-            (_, cache, _), toks_seq = jax.lax.scan(
-                body, (toks, cache, pos), None, length=self.sync_every)
-            return toks_seq, cache
-
-        # donate the slot cache: run() always rebinds it to the returned
-        # value, so XLA can update the KV buffers in place instead of
-        # copying the whole (L, S, max_len, kv, hd) cache every step
-        self._admit_fn = jax.jit(admit, donate_argnums=(1,))
-        self._decode_fn = jax.jit(decode, donate_argnums=(1,))
-        self._decode_window_fn = (
-            jax.jit(decode_window, donate_argnums=(1,))
-            if self.sync_every > 1 else None)
+    @property
+    def decode_traces(self) -> int:
+        return self.engine.decode_traces
 
     def warmup(self) -> None:
-        """Compile both step functions outside any timed window: one
-        dummy admission + decode on a scratch cache. ``serve_continuous``
-        calls this before its metered run so the dumped ``tokens_per_s``
-        tracks scheduling, not first-call XLA compile time."""
-        cache = self._place_cache(
-            slots_mod.init_slot_cache(self.cfg, self.num_slots,
-                                      self.max_len, self.cache_dtype))
-        toks = jnp.zeros((1, self.prompt_pad), jnp.int32)
-        tok0, cache = self._admit_fn(self.params, cache, toks,
-                                     jnp.int32(1), jnp.int32(0))
-        tok_vec = self._place_vec(jnp.zeros((self.num_slots, 1), jnp.int32))
-        pos_vec = self._place_vec(jnp.zeros((self.num_slots,), jnp.int32))
-        next_toks, cache = self._decode_fn(self.params, cache, tok_vec,
-                                           pos_vec)
-        if self._decode_window_fn is not None:
-            toks_seq, cache = self._decode_window_fn(
-                self.params, cache,
-                self._place_vec(jnp.zeros((self.num_slots, 1), jnp.int32)),
-                pos_vec)
-            jax.block_until_ready(toks_seq)
-        jax.block_until_ready((tok0, next_toks))
+        """Compile every step function outside any timed window (see
+        ``ServingEngine.warmup``). ``serve_continuous`` calls this before
+        its metered run so the dumped ``tokens_per_s`` tracks scheduling,
+        not first-call XLA compile time."""
+        self.engine.warmup()
 
     def _validate(self, requests: Sequence[Request]) -> None:
         seen = set()
@@ -314,144 +224,141 @@ class ContinuousScheduler:
             if r.arrival < 0:
                 raise ValueError(
                     f"request {r.request_id!r}: negative arrival time")
+            if not (0 <= r.shared_prefix_len <= plen):
+                raise ValueError(
+                    f"request {r.request_id!r}: shared_prefix_len "
+                    f"{r.shared_prefix_len} outside [0, {plen}]")
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request],
             callbacks: Optional[StreamCallbacks] = None) -> RunResult:
         """Serve every request to completion; returns completions plus
-        aggregate metrics. Reusable: each call builds a fresh slot cache
-        but reuses the compiled step functions."""
+        aggregate metrics. Reusable: each call builds a fresh
+        ``DecodeState`` but reuses the compiled step functions."""
         self._validate(requests)
+        engine = self.engine
         cb = callbacks if callbacks is not None else TokenCollector()
         pending = deque(sorted(
             requests, key=lambda r: (r.arrival, str(r.request_id))))
-        alloc = slots_mod.SlotAllocator(self.num_slots)
-        cache = self._place_cache(
-            slots_mod.init_slot_cache(self.cfg, self.num_slots,
-                                      self.max_len, self.cache_dtype))
+        state = engine.init_state()
         ready: List[Request] = []
-        active: Dict[int, _InFlight] = {}
+        # in-flight (possibly chunked) prefills, FIFO; slot is reserved
+        # at task start so concurrent tasks can never oversubscribe
+        admitting: List[Tuple[Request, PrefillTask, int]] = []
+        # slot -> (request, admit_step, first_token_wall_s)
+        live: Dict[int, Tuple[Request, float, float]] = {}
         completions: List[Completion] = []
         step = 0.0
-        decode_steps = prefills = host_syncs = 0
+        decode_steps = prefills = host_syncs = prefill_units = 0
         occupancy_acc = 0
+        reasons = {"budget": 0, "eos": 0, "stop_token": 0}
         t0 = time.time()
 
-        def finish(st: _InFlight, at: float) -> None:
-            alloc.free(st.slot)
+        def finish(view: SlotView, req: Request, admit_at: float,
+                   first_wall: float, at: float) -> None:
+            reason = view.stop_reason or "budget"
+            reasons[reason] += 1
             comp = Completion(
-                request_id=st.req.request_id,
-                prompt=np.asarray(st.req.tokens, np.int32),
-                tokens=np.asarray(st.tokens, np.int32),
-                arrival_step=st.req.arrival, admit_step=st.admit_step,
-                finish_step=at, slot=st.slot)
+                request_id=req.request_id,
+                prompt=np.asarray(req.tokens, np.int32),
+                tokens=np.asarray(view.tokens, np.int32),
+                arrival_step=req.arrival, admit_step=admit_at,
+                finish_step=at, slot=view.slot, stop_reason=reason,
+                first_token_wall_s=first_wall,
+                finish_wall_s=time.time() - t0)
             completions.append(comp)
             cb.on_finish(comp)
 
-        while pending or ready or active:
+        while pending or ready or admitting or state.slots:
             while pending and pending[0].arrival <= step:
                 ready.append(pending.popleft())
-            if not ready and not active:
+            if not ready and not admitting and not state.slots:
                 step = pending[0].arrival   # idle: jump to next arrival
                 continue
-            # --- admission: refill free slots from the ready queue ------
-            admitted = 0
-            while ready and admitted < self.max_prefills_per_step:
-                slot = alloc.alloc(ready[0].request_id)
-                if slot is None:
-                    break
-                req = ready.pop(0)
-                plen = int(np.asarray(req.tokens).shape[0])
-                padded = np.zeros((1, self.prompt_pad), np.int32)
-                padded[0, :plen] = np.asarray(req.tokens, np.int32)
-                tok0, cache = self._admit_fn(
-                    self.params, cache, jnp.asarray(padded),
-                    jnp.int32(plen), jnp.int32(slot))
-                prefills += 1
-                admitted += 1
-                cb.on_admit(req.request_id, slot, step + 1.0)
-                tok0 = int(jax.device_get(tok0))
-                cb.on_token(req.request_id, tok0, 0)
-                st = _InFlight(req=req, slot=slot, admit_step=step + 1.0,
-                               tokens=[tok0], pos=plen)
-                if req.max_new_tokens == 1:
-                    finish(st, step + 1.0)
+            # --- admission: up to max_prefills_per_step units of prefill
+            # work per iteration — one unit == one compiled call, so a
+            # chunked long prompt spreads across iterations and decode
+            # keeps running in between. In-flight tasks advance first
+            # (FIFO), then ready requests claim free slots.
+            units = 0
+            while units < self.max_prefills_per_step:
+                if admitting:
+                    req, task, slot = admitting[0]
+                elif ready:
+                    slot = state.alloc.alloc(ready[0].request_id)
+                    if slot is None:
+                        break
+                    req = ready.pop(0)
+                    task = engine.start_prefill(req.tokens,
+                                                req.shared_prefix_len)
+                    admitting.append((req, task, slot))
                 else:
-                    active[slot] = st
+                    break
+                done = engine.prefill_step(task)
+                units += 1
+                prefill_units += 1
+                if done:
+                    admitting.pop(0)
+                    state, view = engine.insert(
+                        task.prefix, state,
+                        max_new_tokens=req.max_new_tokens,
+                        request_id=req.request_id, slot=slot)
+                    prefills += 1
+                    admit_at = step + 1.0
+                    first_wall = time.time() - t0
+                    cb.on_admit(req.request_id, slot, admit_at)
+                    cb.on_token(req.request_id, view.tokens[0], 0)
+                    if view.done:
+                        # budget of one — or the prefill token itself is
+                        # a stop token: complete without a decode step
+                        finish(view, req, admit_at, first_wall, admit_at)
+                    else:
+                        live[slot] = (req, admit_at, first_wall)
             # --- decode over all occupied slots -------------------------
-            # With sync_every > 1, a fixed-length window of fused decode
-            # steps runs on-device between host syncs whenever that is
-            # *observably identical* to stepping one at a time: no slot
-            # may retire mid-window (bounded by the minimum remaining
-            # budget) and no admission opportunity may be skipped (a free
-            # slot plus a ready/arriving request forces single steps, so
-            # TTFT accounting never shifts). Tokens are identical either
-            # way; only the host-sync cadence changes.
-            window = 1
-            if active:
-                if self._decode_window_fn is not None:
+            # With sync_every > 1, up to a full window of fused decode
+            # steps runs on-device between host syncs. The bound keeps
+            # the virtual accounting exact in budget-only mode: no slot
+            # may exhaust its budget mid-window and no admission
+            # opportunity may be skipped. Ragged windows (2..k-1) run
+            # *fused* through the masked scan — the per-slot validity
+            # mask freezes rows past the bound, so tokens and latency
+            # accounting match single-stepping while the host syncs once.
+            active_n = len(state.slots)
+            if state.slots:
+                window = 1
+                if self.sync_every > 1:
                     window = min(self.sync_every,
-                                 min(st.req.max_new_tokens - len(st.tokens)
-                                     for st in active.values()))
-                    if alloc.num_free > 0:
+                                 min(v.budget_left
+                                     for v in state.slots.values()))
+                    if admitting:
+                        window = 1   # chunk-per-step interleave
+                    elif state.alloc.num_free > 0:
                         if ready:
                             window = 1
                         elif pending:
                             window = min(window, max(1, int(np.ceil(
                                 pending[0].arrival - step))))
-                    if window != self.sync_every:
-                        # only the compiled fixed-length window runs
-                        # fused; ragged tails fall back to single steps
-                        # so the step functions stay compile-once
-                        window = 1
-                tok_vec = np.zeros((self.num_slots, 1), np.int32)
-                pos_vec = np.zeros((self.num_slots,), np.int32)
-                for slot, st in active.items():
-                    tok_vec[slot, 0] = st.tokens[-1]
-                    pos_vec[slot] = st.pos
-                # steady state: placement is explicit (device_put), the
-                # dispatch runs under the sanitizer's transfer guard
-                # (when armed), and the result comes back through an
-                # explicit device_get — no implicit transfer anywhere
-                tok_dev = self._place_vec(tok_vec)
-                pos_dev = self._place_vec(pos_vec)
-                guard = (self.sanitizer.decode_guard()
-                         if self.sanitizer is not None
-                         else contextlib.nullcontext())
-                with guard:
-                    if window > 1:
-                        toks_dev, cache = self._decode_window_fn(
-                            self.params, cache, tok_dev, pos_dev)
-                    else:
-                        next_dev, cache = self._decode_fn(
-                            self.params, cache, tok_dev, pos_dev)
-                if window > 1:
-                    toks_seq = jax.device_get(toks_dev)  # (window, S)
-                else:
-                    toks_seq = jax.device_get(next_dev)[None]
+                    window = max(1, window)
+                state, res = engine.generate(state, max_steps=window)
                 host_syncs += 1
-                decode_steps += window
-                occupancy_acc += window * len(active)
-                for i in range(window):     # step-major: sync=1 ordering
-                    for slot in sorted(active):
-                        st = active[slot]
-                        tok = int(toks_seq[i, slot])
-                        st.tokens.append(tok)
-                        st.pos += 1
-                        cb.on_token(st.req.request_id, tok,
-                                    len(st.tokens) - 1)
-                for slot in sorted(active):
-                    st = active[slot]
-                    if len(st.tokens) == st.req.max_new_tokens:
-                        del active[slot]
-                        finish(st, step + window)
-            step += float(window)
+                decode_steps += res.steps
+                occupancy_acc += res.steps * active_n
+                for ev in res.events:
+                    cb.on_token(ev.request_id, ev.token, ev.index)
+                for view, i_last in res.finished:
+                    req, admit_at, first_wall = live.pop(view.slot)
+                    finish(view, req, admit_at, first_wall,
+                           step + i_last + 1.0)
+                step += float(res.steps)
+            else:
+                step += 1.0
 
         wall_s = time.time() - t0
-        if alloc.num_active:
+        if state.alloc.num_active:
             raise AssertionError(
-                f"slot leak: {alloc.num_active} slots still allocated "
-                f"after the queue drained ({alloc.active_slots()})")
+                f"slot leak: {state.alloc.num_active} slots still "
+                f"allocated after the queue drained "
+                f"({state.alloc.active_slots()})")
         total_tokens = int(sum(c.tokens.shape[0] for c in completions))
         ttfts = [c.ttft_steps for c in completions]
         lats = [c.latency_steps for c in completions]
@@ -462,12 +369,18 @@ class ContinuousScheduler:
             "prompt_pad": self.prompt_pad,
             "max_len": self.max_len,
             "prefills": prefills,
+            "prefill_units": prefill_units,
+            "prefill_chunk": self.prefill_chunk or 0,
             "decode_steps": decode_steps,
             "sync_every": self.sync_every,
             "host_syncs": host_syncs,
-            "prefill_traces": self.prefill_traces,
-            "decode_traces": self.decode_traces,
+            "prefill_traces": engine.prefill_traces,
+            "insert_traces": engine.insert_traces,
+            "decode_traces": engine.decode_traces,
             "generated_tokens": total_tokens,
+            "stop_reasons": dict(reasons),
+            "prefix_cache": (engine.prefix_cache.stats()
+                             if engine.prefix_cache is not None else None),
             "wall_s": wall_s,
             "tokens_per_s": total_tokens / wall_s if wall_s > 0 else 0.0,
             "mean_slot_occupancy": (
@@ -477,4 +390,7 @@ class ContinuousScheduler:
         for name, vals in (("ttft_steps", ttfts), ("latency_steps", lats)):
             for pk, pv in _percentiles(vals).items():
                 metrics[f"{name}_{pk}"] = pv
+        for pk, pv in _percentiles(
+                [c.first_token_wall_s for c in completions]).items():
+            metrics[f"first_token_wall_s_{pk}"] = pv
         return RunResult(completions=completions, metrics=metrics)

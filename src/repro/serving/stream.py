@@ -21,11 +21,22 @@ class Completion:
 
     request_id: Hashable
     prompt: np.ndarray           # (prompt_len,) int32 prompt tokens
-    tokens: np.ndarray           # (max_new_tokens,) int32 generated tokens
+    tokens: np.ndarray           # (<= max_new_tokens,) int32 generated tokens
     arrival_step: float          # virtual time the request arrived
     admit_step: float            # virtual time it won a slot (prefill ran)
     finish_step: float           # virtual time its last token was produced
     slot: int                    # slot it occupied (diagnostics)
+    # why generation ended: the trace budget ran out ("budget"), the
+    # model emitted its EOS token ("eos"), or a user stop token
+    # ("stop_token"). The stop token itself is the last entry of
+    # ``tokens``; nothing is emitted after it.
+    stop_reason: str = "budget"
+    # wall-clock marks relative to the run start (seconds). The virtual
+    # clock stays the unit of latency *accounting*; these feed the
+    # decode microbenchmark's chunked-vs-unchunked TTFT comparison,
+    # which is about real prefill stalls, not scheduling policy.
+    first_token_wall_s: float = 0.0
+    finish_wall_s: float = 0.0
 
     @property
     def ttft_steps(self) -> float:

@@ -332,11 +332,12 @@ def test_sanitized_scheduler_run_is_transfer_clean():
                                 max_len=16, sanitizer=san)
     reqs = poisson_trace(n=4, rate=0.0, prompt_lens=[2, 5],
                          gen_lens=[2, 4], vocab=cfg.vocab_size, seed=3)
-    with san.compile_counter(names=("admit", "decode")) as counter:
+    with san.compile_counter(
+            names=("prefill", "insert", "decode")) as counter:
         sched.warmup()
         res = sched.run(reqs)
     assert len(res.completions) == len(reqs)
-    counter.expect(admit=1, decode=1)
+    counter.expect(prefill=1, insert=1, decode=1)
 
 
 def test_compile_counter_counts_and_expects():
