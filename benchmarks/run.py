@@ -55,7 +55,7 @@ def run_json(path: str) -> None:
             " --xla_force_host_platform_device_count=4").strip()
     import json
     from benchmarks import (decode_microbenchmark, pim_plan_bench,
-                            serving_bench)
+                            reliability_bench, serving_bench)
     sections = {}
     t0 = time.time()
     sections["pim_plan"] = _rows_to_json(
@@ -68,6 +68,8 @@ def run_json(path: str) -> None:
         serving_bench.serving_bench("exact-jnp"))
     sections["serving_engine"] = _rows_to_json(
         decode_microbenchmark.all_rows())
+    sections["reliability"] = _rows_to_json(
+        reliability_bench.reliability_bench())
     sections["meta"] = {
         "devices": len(__import__("jax").devices()),
         "wall_s_total": time.time() - t0,

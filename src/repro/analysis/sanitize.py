@@ -144,3 +144,15 @@ class Sanitizer:
     def compile_counter(self, names: Optional[Sequence[str]] = None
                         ) -> CompileCounter:
         return CompileCounter(names=names)
+
+    def report(self) -> Dict[str, object]:
+        """Structured sanitizer state for a metrics dump: which guards
+        were armed, plus the process-global ABFT fault-log counters
+        (checks / violations seen this process) so a chaos run's
+        detection evidence rides in the same JSON as the transfer-guard
+        and compile-sentinel results."""
+        out: Dict[str, object] = {"transfer_guard": self.transfer_guard,
+                                  "nan_debug": self.nan_debug}
+        from repro.reliability import FAULT_LOG
+        out["fault_log"] = FAULT_LOG.snapshot()
+        return out

@@ -38,6 +38,22 @@ import numpy as np
 PyTree = Any
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A stored leaf payload fails its manifest sha256 (bit-rot, torn
+    write, tampering) or cannot be read back at all. ``leaf_index`` /
+    ``leaf_name`` identify the offending entry in ``arrays.npz``."""
+
+    def __init__(self, msg: str, leaf_index: Optional[int] = None,
+                 leaf_name: Optional[str] = None) -> None:
+        super().__init__(msg)
+        self.leaf_index = leaf_index
+        self.leaf_name = leaf_name
+
+
+def _payload_sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
 def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree.flatten(tree)
     paths = [f"leaf_{i:05d}" for i in range(len(flat))]
@@ -98,6 +114,9 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
         "num_leaves": len(flat),
         "dtypes": [str(np.asarray(x).dtype) for x in flat],
         "shapes": [list(np.asarray(x).shape) for x in flat],
+        # per-leaf payload digest over the stored bytes (bf16 leaves hash
+        # their uint16 bit pattern), verified on restore
+        "sha256": [_payload_sha256(arrays[p]) for p in paths],
         "extras": extras or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -153,8 +172,22 @@ def restore_checkpoint(directory: str, template: PyTree,
     leaves = []
     flat_sh = treedef.flatten_up_to(shardings) if shardings is not None \
         else [None] * len(flat_t)
+    digests = manifest.get("sha256")
     for i, (t, sh) in enumerate(zip(flat_t, flat_sh)):
-        arr = data[f"leaf_{i:05d}"]
+        name = f"leaf_{i:05d}"
+        try:
+            arr = data[name]
+        except Exception as e:  # truncated/torn npz member
+            raise CheckpointCorruptionError(
+                f"cannot read {name} from {path}/arrays.npz: {e}",
+                leaf_index=i, leaf_name=name) from e
+        if digests is not None:
+            live = _payload_sha256(arr)
+            if live != digests[i]:
+                raise CheckpointCorruptionError(
+                    f"payload sha256 mismatch for {name} at {path}: "
+                    f"stored {digests[i][:12]}..., read {live[:12]}...",
+                    leaf_index=i, leaf_name=name)
         assert list(arr.shape) == list(t.shape), \
             f"shape mismatch at leaf {i}: {arr.shape} vs {t.shape}"
         if manifest["dtypes"][i] == "bfloat16" and arr.dtype == np.uint16:

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cell import DEFAULT_CELL
-from repro.quant.nibbles import num_nibbles, to_nibbles
+from repro.quant.nibbles import NIBBLE_BASE, num_nibbles, to_nibbles
 from repro.quant.quantize import QTensor, quantize
 
 # Canonical substrate names (registry keys — see repro/engine/substrates.py).
@@ -106,6 +106,17 @@ class PimConfig:
                                       # per-backend (interpreter off-TPU,
                                       # compiled Mosaic on TPU) via
                                       # kernels.runtime.resolve_interpret
+    verify: str = "off"           # ABFT checksum policy: "off" | "sample"
+                                  # | "always" (repro.reliability.abft).
+                                  # Non-"off" at programming time appends
+                                  # the checksum record to the plan; at
+                                  # execute time it checks the int32
+                                  # accumulator row-sums (exact routes)
+                                  # or a noise-banded float row-sum +
+                                  # storage audit (analog routes)
+    abft_tag: Optional[str] = None  # violation-report tag (the plan's
+                                    # tree path in a serving params tree;
+                                    # quarantine keys on it)
 
     @property
     def weight_planes(self) -> int:
@@ -195,6 +206,13 @@ class DensePlan(Plan):
     cfg: PimConfig = DEFAULT_PIM  # operating point the plan was built for
     shard: Optional[object] = None  # PlanShard (engine/mesh.py) when the
                                     # plan is split over a device mesh
+    abft: Optional[dict] = None  # ABFT checksum record (col_i32 (K,),
+                                 # col_f32 (K,), scale_sum ()) computed at
+                                 # programming time when cfg.verify is not
+                                 # "off" — see repro.reliability.abft.
+                                 # None flattens to zero extra leaves, so
+                                 # legacy plans/checkpoints keep their
+                                 # leaf count
 
     @property
     def shape(self):
@@ -202,15 +220,16 @@ class DensePlan(Plan):
 
     # pytree plumbing -----------------------------------------------------
     def tree_flatten(self):
-        return ((self.values, self.scale, self.planes, self.padded_scale),
+        return ((self.values, self.scale, self.planes, self.padded_scale,
+                 self.abft),
                 (self.bits, self.k, self.n, self.cfg, self.shard))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        values, scale, planes, padded_scale = children
+        values, scale, planes, padded_scale, abft = children
         return cls(values=values, scale=scale, planes=planes,
                    padded_scale=padded_scale, bits=aux[0], k=aux[1],
-                   n=aux[2], cfg=aux[3], shard=aux[4])
+                   n=aux[2], cfg=aux[3], shard=aux[4], abft=abft)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -306,9 +325,20 @@ def plan_from_qtensor(w_q: QTensor, cfg: PimConfig = DEFAULT_PIM
         planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
     padded_scale = jnp.pad(jnp.broadcast_to(w_q.scale, (1, n)),
                            ((0, 0), (0, pad_n)))
+    abft = None
+    if cfg.verify != "off":
+        # programming-time ABFT checksum column: sum_n of the codes (and
+        # of the dequantized columns / the scale row). Verified against
+        # the accumulator row-sums at every execute when cfg.verify asks
+        from repro.reliability import abft as abft_mod
+        if cfg.verify not in abft_mod.VERIFY_MODES:
+            raise ValueError(f"unknown verify mode {cfg.verify!r}; "
+                             f"expected one of {abft_mod.VERIFY_MODES}")
+        abft = abft_mod.checksums(w_q.values, jnp.broadcast_to(w_q.scale,
+                                                               (1, n)))
     return DensePlan(values=w_q.values, scale=w_q.scale, planes=planes,
                      padded_scale=padded_scale, bits=w_q.bits, k=k, n=n,
-                     cfg=cfg)
+                     cfg=cfg, abft=abft)
 
 
 def prepare_weights(w: jax.Array, cfg: PimConfig = DEFAULT_PIM) -> DensePlan:
@@ -393,8 +423,73 @@ def _quantize_activations(x2: jax.Array, cfg: PimConfig):
     return a_q, to_nibbles(a_q.values, cfg.act_bits)       # (Pa, M, K)
 
 
+# ---------------------------------------------------------------------------
+# ABFT verification (repro.reliability.abft does the checksum math; these
+# helpers adapt it to each substrate's intermediates and post the result)
+# ---------------------------------------------------------------------------
+def _abft_report_exact(rowsum: jax.Array, a_values: jax.Array,
+                       plan: DensePlan, cfg: PimConfig) -> None:
+    """Exact-substrate check: int32 accumulator row-sums against the
+    checksum-column matvec (bit-exact, wraparound-safe)."""
+    from repro.reliability import abft as abft_mod
+    viol = abft_mod.int_violations(rowsum, a_values, plan.abft, plan.scale,
+                                   mode=cfg.verify, tag=cfg.abft_tag)
+    abft_mod.report(cfg.abft_tag, viol)
+
+
+def _abft_report_float(out: jax.Array, expected: jax.Array, extra_tol,
+                       plan: DensePlan, cfg: PimConfig) -> None:
+    """Float-substrate check: banded output row-sums plus the exact plane/
+    scale storage audits (which carry the deterministic detection)."""
+    from repro.reliability import abft as abft_mod
+    out = out.astype(jnp.float32)
+    # 1e-3 relative band absorbs float re-association across N <= 4096
+    tol = extra_tol + 1e-3 * jnp.abs(out).sum(axis=1) + 1e-6
+    viol = abft_mod.float_violations(out.sum(axis=1), expected, tol,
+                                     plan.planes, plan.abft, plan.scale,
+                                     k=plan.k, mode=cfg.verify,
+                                     tag=cfg.abft_tag)
+    abft_mod.report(cfg.abft_tag, viol)
+
+
+def _analog_rowsum_tolerance(a_q: QTensor, plan: DensePlan, cfg: PimConfig,
+                             chunk: int, sigma: float) -> jax.Array:
+    """Static upper bound on the analog readout's row-sum error: per-ADC
+    rounding (half an LSB at the worst-case full scale chunk*15^2) plus a
+    6-sigma transmission-noise margin, accumulated over chunks and plane
+    pairs, scaled by the live dequantization scales. Deliberately loose —
+    the exact storage audits do the fault detection; this band only flags
+    gross runtime corruption the stores cannot see."""
+    from repro.kernels.analog_readout.ref import inv_half_levels
+    digit_max = float(NIBBLE_BASE - 1)
+    pa = num_nibbles(cfg.act_bits)
+    pw = plan.planes.shape[-3]
+    s16 = float(sum(16 ** d for d in range(pa))
+                * sum(16 ** e for e in range(pw)))
+    kp = plan.planes.shape[-2]
+    n_chunks = max(-(-kp // max(chunk, 1)), 1)
+    lsb_bound = chunk * digit_max ** 2 * inv_half_levels(cfg.adc_bits)
+    per_col = n_chunks * s16 * (0.5 * lsb_bound
+                                + 6.0 * sigma * digit_max ** 2
+                                * chunk ** 0.5)
+    return a_q.scale[:, 0] * jnp.abs(plan.scale).sum() * per_col
+
+
+def _abft_report_analog(out: jax.Array, a_q: QTensor, plan: DensePlan,
+                        cfg: PimConfig, chunk: int, sigma: float,
+                        bias: Optional[jax.Array]) -> None:
+    expected = a_q.scale[:, 0] * (
+        a_q.values.astype(jnp.float32) @ plan.abft["col_f32"])
+    if bias is not None:
+        expected = expected + bias.astype(jnp.float32).sum()
+    _abft_report_float(out, expected,
+                       _analog_rowsum_tolerance(a_q, plan, cfg, chunk,
+                                                sigma), plan, cfg)
+
+
 def exact_jnp_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
-                       bias: Optional[jax.Array] = None) -> jax.Array:
+                       bias: Optional[jax.Array] = None,
+                       verify: bool = False) -> jax.Array:
     """``exact-jnp`` substrate: integer plane matmuls + shift-and-add in
     plain jnp, dequantized eagerly. Bit-identical to the Pallas route
     without a bias; the kernel's fused bias contracts mul+add to an FMA
@@ -402,6 +497,8 @@ def exact_jnp_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
     a_q, a_planes = _quantize_activations(x2, cfg)
     w_planes = plan.planes[:, :plan.k, :plan.n]
     acc = _shift_add(_plane_matmuls(a_planes, w_planes))
+    if verify:
+        _abft_report_exact(acc.sum(axis=1), a_q.values, plan, cfg)
     out = acc.astype(jnp.float32) * a_q.scale * plan.scale
     if bias is not None:
         out = out + bias.astype(jnp.float32).reshape(1, -1)
@@ -430,17 +527,47 @@ def _pad_bias(bias: Optional[jax.Array], plan: DensePlan
 
 
 def exact_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
-                          bias: Optional[jax.Array] = None) -> jax.Array:
+                          bias: Optional[jax.Array] = None,
+                          verify: bool = False) -> jax.Array:
     """``exact-pallas`` substrate: the Pallas kernel with the fused dequant
     epilogue (per-row act-scale × per-col weight-scale + optional bias on
-    the int32 accumulator tile in VMEM)."""
+    the int32 accumulator tile in VMEM). With ``verify`` the kernel also
+    returns the int32 accumulator row-sums from the epilogue for the ABFT
+    check (padded columns hold zero planes, so the padded row-sum equals
+    the logical one).
+
+    Interpret-mode verify takes the raw integer kernel plus a jnp
+    epilogue instead: the interpreter charges per grid-step ref traffic,
+    so the extra row-sum output costs ~9% there while the raw kernel
+    (two inputs, one output) plus an out-of-kernel dequant is ~3% — and
+    the accumulator, row-sum, and dequantized output are bit-identical
+    between the two routes (same modular int32 sums, same float
+    expression order). Compiled TPU keeps the fused epilogue, where the
+    row-sum rides the accumulator tile already in VMEM."""
     from repro.kernels.pim_matmul import ops as pim_ops
+    from repro.kernels.runtime import resolve_interpret
     a_q, a_planes = _quantize_activations(x2, cfg)
-    return pim_ops.pim_matmul_fused(_pad_act_planes(a_planes, plan),
-                                    plan.planes, a_q.scale,
-                                    plan.padded_scale,
-                                    bias=_pad_bias(bias, plan),
-                                    interpret=cfg.interpret)[:, :plan.n]
+    ap = _pad_act_planes(a_planes, plan)
+    if verify and resolve_interpret(cfg.interpret):
+        acc = pim_ops.pim_matmul_int(ap, plan.planes,
+                                     interpret=cfg.interpret)
+        _abft_report_exact(acc.sum(axis=1, dtype=jnp.int32), a_q.values,
+                           plan, cfg)
+        out = acc.astype(jnp.float32) * a_q.scale * plan.padded_scale
+        pb = _pad_bias(bias, plan)
+        if pb is not None:
+            out = out + pb
+        return out[:, :plan.n]
+    res = pim_ops.pim_matmul_fused(ap, plan.planes, a_q.scale,
+                                   plan.padded_scale,
+                                   bias=_pad_bias(bias, plan),
+                                   interpret=cfg.interpret,
+                                   want_rowsum=verify)
+    if verify:
+        out, rowsum = res
+        _abft_report_exact(rowsum, a_q.values, plan, cfg)
+        return out[:, :plan.n]
+    return res[:, :plan.n]
 
 
 # ---------------------------------------------------------------------------
@@ -501,25 +628,30 @@ def _analog_inputs(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
 
 def analog_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
                     bias: Optional[jax.Array] = None,
-                    rng: Optional[jax.Array] = None) -> jax.Array:
+                    rng: Optional[jax.Array] = None,
+                    verify: bool = False) -> jax.Array:
     """``analog`` substrate: the whole-array jnp readout oracle — it
     materializes the full (planes, chunks, M, N) chunk-sum tensor, which
     makes it the slow-but-transparent accuracy-study twin of
     ``analog-pallas``."""
     from repro.kernels.analog_readout.ref import analog_readout_fused_ref
     a_q, a_planes, chunk, sigma = _analog_inputs(x2, plan, cfg, rng)
+    sigma_eff = sigma if rng is not None else 0.0
     out = analog_readout_fused_ref(
         a_planes, plan.planes, a_q.scale, plan.padded_scale, chunk,
-        cfg.adc_bits, sigma=sigma if rng is not None else 0.0, rng=rng
+        cfg.adc_bits, sigma=sigma_eff, rng=rng
     )[:, :plan.n]
     if bias is not None:
         out = out + bias.astype(jnp.float32).reshape(1, -1)
+    if verify:
+        _abft_report_analog(out, a_q, plan, cfg, chunk, sigma_eff, bias)
     return out
 
 
 def analog_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
                            bias: Optional[jax.Array] = None,
-                           rng: Optional[jax.Array] = None) -> jax.Array:
+                           rng: Optional[jax.Array] = None,
+                           verify: bool = False) -> jax.Array:
     """``analog-pallas`` substrate: the fused Pallas analog-readout kernel
     — chunked PD sums, optional threaded-key transmission noise, shared
     auto-ranged ADC, integer code accumulation, and the recombination/
@@ -534,19 +666,23 @@ def analog_pallas_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
         # per tile (vmap-safe — expert stacks batch it like any operand)
         seed = jax.random.randint(rng, (), 0, jnp.iinfo(jnp.int32).max,
                                   dtype=jnp.int32)
+    sigma_eff = sigma if rng is not None else 0.0
     out = analog_ops.analog_matmul_fused(
         a_planes, plan.planes, a_q.scale, plan.padded_scale, seed,
         _pad_bias(bias, plan), chunk=chunk, adc_bits=cfg.adc_bits,
-        sigma=sigma if rng is not None else 0.0,
-        interpret=cfg.interpret)
-    return out[:, :plan.n]
+        sigma=sigma_eff, interpret=cfg.interpret)
+    out = out[:, :plan.n]
+    if verify:
+        _abft_report_analog(out, a_q, plan, cfg, chunk, sigma_eff, bias)
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Emulation math (weight-quantization-only; the old serve escape hatch)
 # ---------------------------------------------------------------------------
 def emulate_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
-                     bias: Optional[jax.Array] = None) -> jax.Array:
+                     bias: Optional[jax.Array] = None,
+                     verify: bool = False) -> jax.Array:
     """``emulate`` substrate: float matmul against the dequantized codes.
 
     Models the *weight* programming (cell-density quantization) only — no
@@ -556,6 +692,11 @@ def emulate_matmul2d(x2: jax.Array, plan: DensePlan, cfg: PimConfig,
     out = x2.astype(jnp.float32) @ plan.dequantized()
     if bias is not None:
         out = out + bias.astype(jnp.float32).reshape(1, -1)
+    if verify:
+        expected = x2.astype(jnp.float32) @ plan.abft["col_f32"]
+        if bias is not None:
+            expected = expected + bias.astype(jnp.float32).sum()
+        _abft_report_float(out, expected, 0.0, plan, cfg)
     return out
 
 

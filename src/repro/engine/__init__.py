@@ -36,7 +36,8 @@ from repro.core.pim import (DEFAULT_PIM, DensePlan, DepthwisePlan,
 from repro.engine.api import matmul, program
 from repro.engine.mesh import (PlanShard, replicate, shard_plan,
                                shard_plan_tree)
-from repro.engine.persist import load_plans, save_plans
+from repro.engine.persist import (PlanCorruptionError, load_plans,
+                                  save_plans)
 from repro.engine.substrates import (AnalogPallasSubstrate, AnalogSubstrate,
                                      EmulateSubstrate, ExactJnpSubstrate,
                                      ExactPallasSubstrate, Substrate,
@@ -53,6 +54,6 @@ __all__ = [
     "available_substrates",
     "ExactPallasSubstrate", "ExactJnpSubstrate", "AnalogSubstrate",
     "AnalogPallasSubstrate", "EmulateSubstrate",
-    "save_plans", "load_plans",
+    "save_plans", "load_plans", "PlanCorruptionError",
     "PlanShard", "shard_plan", "shard_plan_tree", "replicate",
 ]

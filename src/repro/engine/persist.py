@@ -27,12 +27,48 @@ import os
 import warnings
 from typing import Any, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.core import pim
 
 PLANS_EXTRAS_KEY = "engine_plans"
+
+
+class PlanCorruptionError(ckpt.CheckpointCorruptionError):
+    """A persisted plan leaf failed its manifest sha256 on restore (or
+    could not be read back). ``leaf_path`` names the offending leaf in
+    the plan tree (e.g. ``layers/wq.planes``)."""
+
+    def __init__(self, msg: str, leaf_path: str,
+                 leaf_index: Optional[int] = None) -> None:
+        super().__init__(msg, leaf_index=leaf_index)
+        self.leaf_path = leaf_path
+
+
+def _leaf_path_name(template: Any, index: Optional[int]) -> str:
+    """Human name of flattened leaf ``index`` in a plan-tree template
+    (container keys slash-joined, plan fields dot-joined)."""
+    if index is None:
+        return "<unknown leaf>"
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    if not 0 <= index < len(paths):
+        return f"<leaf {index}>"
+
+    def _part(key) -> str:
+        tu = jax.tree_util
+        if isinstance(key, tu.DictKey):
+            return f"/{key.key}"
+        if isinstance(key, tu.SequenceKey):
+            return f"/{key.idx}"
+        if isinstance(key, tu.GetAttrKey):
+            return f".{key.name}"
+        if isinstance(key, tu.FlattenedIndexKey):
+            return f".{key.key}"   # plan child slot (values/scale/planes/...)
+        return f"/{key}"
+
+    return "".join(_part(k) for k in paths[index][0]).lstrip("/.") or "<root>"
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +96,11 @@ def describe_plan_tree(tree: Any) -> Dict[str, Any]:
                "leaves": [_leaf_spec(l) for l in
                           (tree.values, tree.scale, tree.planes,
                            tree.padded_scale)]}
+        if tree.abft is not None:
+            # ABFT checksum record: a {name: leaf} dict child — described
+            # key-by-key so the rebuilt template flattens identically
+            out["abft"] = {name: _leaf_spec(leaf)
+                           for name, leaf in sorted(tree.abft.items())}
         if tree.shard is not None:
             out["shard"] = {"kind": tree.shard.kind, "axis": tree.shard.axis}
         return out
@@ -113,10 +154,13 @@ def build_plan_template(spec: Dict[str, Any]) -> Any:
             num_experts=spec["num_experts"])
     if kind == "dense-plan":
         z = [_zeros(l) for l in spec["leaves"]]
+        abft = None
+        if spec.get("abft"):
+            abft = {name: _zeros(l) for name, l in spec["abft"].items()}
         return pim.DensePlan(values=z[0], scale=z[1], planes=z[2],
                              padded_scale=z[3], bits=spec["bits"],
                              k=spec["k"], n=spec["n"],
-                             cfg=pim.PimConfig(**spec["cfg"]))
+                             cfg=pim.PimConfig(**spec["cfg"]), abft=abft)
     if kind == "depthwise-plan":
         z = [_zeros(l) for l in spec["leaves"]]
         return pim.DepthwisePlan(values=z[0], scale=z[1], planes=z[2],
@@ -200,8 +244,17 @@ def load_plans(directory: str, step: Optional[int] = None, *,
             f"checkpoint at {directory} step {step} has no "
             f"{PLANS_EXTRAS_KEY!r} spec — was it written by save_plans?")
     template = build_plan_template(spec)
-    plans, step, extras = ckpt.restore_checkpoint(directory, template,
-                                                  step=step)
+    try:
+        plans, step, extras = ckpt.restore_checkpoint(directory, template,
+                                                      step=step)
+    except PlanCorruptionError:
+        raise
+    except ckpt.CheckpointCorruptionError as e:
+        leaf = _leaf_path_name(template, e.leaf_index)
+        raise PlanCorruptionError(
+            f"plan checkpoint at {directory} step {step} is corrupt: "
+            f"leaf {leaf!r} ({e.leaf_name}): {e}", leaf_path=leaf,
+            leaf_index=e.leaf_index) from e
     if mesh is not None:
         plans = _replace_on_mesh(plans, spec, mesh)
     else:

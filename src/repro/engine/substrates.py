@@ -158,6 +158,16 @@ class Substrate:
                  rng: Optional[jax.Array]) -> jax.Array:
         raise NotImplementedError
 
+    @staticmethod
+    def _verify(plan: pim.DensePlan, cfg: pim.PimConfig) -> bool:
+        """Whether this dispatch runs ABFT checksum verification: the
+        plan must carry a checksum record (programmed with
+        ``cfg.verify != "off"``) and the executing config must not have
+        switched it off. Sharded plans never reach here (the mesh
+        executor runs shard-local matmuls verify-free; cross-shard
+        checksums would need a collective epilogue)."""
+        return cfg.verify != "off" and getattr(plan, "abft", None) is not None
+
     def _depthwise(self, x: jax.Array, plan: pim.DepthwisePlan,
                    cfg: pim.PimConfig) -> jax.Array:
         # Depthwise filters (K = kh*kw taps) fit below one WDM chunk, so
@@ -172,7 +182,8 @@ class ExactPallasSubstrate(Substrate):
     is_exact = True
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
-        return pim.exact_pallas_matmul2d(x2, plan, cfg, bias)
+        return pim.exact_pallas_matmul2d(x2, plan, cfg, bias,
+                                         verify=self._verify(plan, cfg))
 
 
 class ExactJnpSubstrate(Substrate):
@@ -182,7 +193,8 @@ class ExactJnpSubstrate(Substrate):
     is_exact = True
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
-        return pim.exact_jnp_matmul2d(x2, plan, cfg, bias)
+        return pim.exact_jnp_matmul2d(x2, plan, cfg, bias,
+                                      verify=self._verify(plan, cfg))
 
 
 class AnalogSubstrate(Substrate):
@@ -193,7 +205,8 @@ class AnalogSubstrate(Substrate):
     is_exact = False
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
-        return pim.analog_matmul2d(x2, plan, cfg, bias, rng)
+        return pim.analog_matmul2d(x2, plan, cfg, bias, rng,
+                                   verify=self._verify(plan, cfg))
 
 
 class AnalogPallasSubstrate(Substrate):
@@ -206,7 +219,8 @@ class AnalogPallasSubstrate(Substrate):
     is_exact = False
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
-        return pim.analog_pallas_matmul2d(x2, plan, cfg, bias, rng)
+        return pim.analog_pallas_matmul2d(x2, plan, cfg, bias, rng,
+                                          verify=self._verify(plan, cfg))
 
 
 class EmulateSubstrate(Substrate):
@@ -227,7 +241,8 @@ class EmulateSubstrate(Substrate):
     integer_datapath = False
 
     def _dense2d(self, x2, plan, cfg, bias, rng):
-        return pim.emulate_matmul2d(x2, plan, cfg, bias)
+        return pim.emulate_matmul2d(x2, plan, cfg, bias,
+                                    verify=self._verify(plan, cfg))
 
     def _depthwise(self, x, plan, cfg):
         return pim.depthwise_emulate_matmul(x, plan, cfg)

@@ -38,19 +38,22 @@ def pim_matmul_int(a_planes: jax.Array, w_planes: jax.Array,
 def pim_matmul_fused(a_planes: jax.Array, w_planes: jax.Array,
                      a_scale: jax.Array, w_scale: jax.Array,
                      bias: Optional[jax.Array] = None,
-                     interpret: Optional[bool] = None, use_ref: bool = False
-                     ) -> jax.Array:
+                     interpret: Optional[bool] = None, use_ref: bool = False,
+                     want_rowsum: bool = False):
     """Nibble planes + scales -> (M, N) float32 via the fused epilogue.
 
     a_scale: (M, 1) per-row act scales; w_scale: (1, N) per-col weight
     scales; bias: optional (1, N). Bit-identical to pim_matmul_fused_ref.
+    ``want_rowsum`` also returns the (M,) int32 accumulator row-sums for
+    ABFT checksum verification (``(out, rowsum)`` pair).
     """
     if use_ref:
         return pim_matmul_fused_ref(a_planes, w_planes, a_scale, w_scale,
-                                    bias)
+                                    bias, want_rowsum=want_rowsum)
     return pim_matmul_fused_pallas(a_planes, w_planes, a_scale, w_scale,
                                    bias,
-                                   interpret=resolve_interpret(interpret))
+                                   interpret=resolve_interpret(interpret),
+                                   want_rowsum=want_rowsum)
 
 
 @functools.partial(jax.jit,

@@ -151,7 +151,7 @@ def pim_matmul_pallas(a_planes: jax.Array, w_planes: jax.Array,
 
 def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
                              pa: int, pw: int, has_bias: bool,
-                             lane_pad: bool):
+                             lane_pad: bool, want_rowsum: bool):
     """One (m, n, k) grid step with the fused dequant epilogue.
 
     a_ref: (Pa, bm, bk) int8  — activation nibble planes tile
@@ -162,16 +162,27 @@ def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
                                 ((1, bn) when lane_pad=False)
     [b_ref]                   — optional bias, same layout as ws_ref
     o_ref: (bm, bn) f32       — dequantized output tile (last k step)
+    [rs_ref]: (bm, LANE) i32  — this (i, j) tile's accumulator row-sum
+                                partial for ABFT (value replicated
+                                across lanes), written once at the last
+                                k step; the caller folds the j-block
+                                partials. Keeping the block private per
+                                (i, j) — instead of accumulating into a
+                                revisited (i, 0) block — keeps the
+                                row-sum out of the grid's critical path
+                                (~13% whole-kernel tax measured on the
+                                revisited form).
     acc_ref: (bm, bn) int32   — VMEM accumulator scratch
 
     ``lane_pad`` selects the register-tile-aligned scale layout; only the
     slice read in the epilogue differs — arithmetic is identical, and the
     parity test pins the two layouts bit-for-bit against each other.
     """
-    if has_bias:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        o_ref, acc_ref = rest
+    rest = list(rest)
+    b_ref = rest.pop(0) if has_bias else None
+    o_ref = rest.pop(0)
+    rs_ref = rest.pop(0) if want_rowsum else None
+    acc_ref = rest.pop(0)
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -193,6 +204,11 @@ def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
     def _write_out():
         # Same op order as the jnp path: (acc * a_scale) * w_scale (+ bias),
         # elementwise in f32 — bit-identical dequantization.
+        if want_rowsum:
+            # int32 wraparound row-sum of this N tile; lanes all carry the
+            # same value so the caller can read lane 0 without a relayout
+            tile_rs = jnp.sum(acc_ref[...], axis=1, keepdims=True)
+            rs_ref[...] = jnp.broadcast_to(tile_rs, rs_ref.shape)
         if lane_pad:
             a_s = as_ref[...][:, :1]        # (bm, 1): value lives in lane 0
             w_s = ws_ref[...][:1, :]        # (1, bn): value lives in row 0
@@ -207,14 +223,15 @@ def _pim_matmul_fused_kernel(a_ref, w_ref, as_ref, ws_ref, *rest, n_k: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "interpret",
-                                    "lane_pad"))
+                                    "lane_pad", "want_rowsum"))
 def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
                             a_scale: jax.Array, w_scale: jax.Array,
                             bias: Optional[jax.Array] = None,
                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                             bk: int = DEFAULT_BK,
                             interpret: bool = False,
-                            lane_pad: bool = True) -> jax.Array:
+                            lane_pad: bool = True,
+                            want_rowsum: bool = False):
     """Bit-sliced integer matmul with the fused dequantization epilogue.
 
     Args:
@@ -229,9 +246,14 @@ def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
         register tiles so compiled Mosaic lowering is clean (default).
         ``False`` keeps the legacy width-1 BlockSpecs — interpret-mode
         only, retained as the parity baseline for tests.
+      want_rowsum: also emit the (M,) int32 accumulator row-sums from
+        the epilogue (ABFT checksum verification input). Zero-padded
+        columns contribute nothing, so the row-sum over the padded tile
+        equals the row-sum over the first N columns exactly.
 
     Returns:
-      (M, N) float32 — bit-exact vs. ref.pim_matmul_fused_ref.
+      (M, N) float32 — bit-exact vs. ref.pim_matmul_fused_ref — or a
+      ``(out, rowsum)`` pair when ``want_rowsum``.
     """
     pa, m, k = a_planes.shape
     pw, k2, n = w_planes.shape
@@ -282,14 +304,34 @@ def pim_matmul_fused_pallas(a_planes: jax.Array, w_planes: jax.Array,
         in_specs.append(ws_spec)
         inputs.append(bias)
 
+    out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+    out_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    if want_rowsum:
+        # one private (bm, LANE) partial per (i, j) tile; the j-block
+        # fold happens below in plain jnp (a handful of int32 columns)
+        out_specs = (out_specs,
+                     pl.BlockSpec((bm, LANE), lambda i, j, s: (i, j)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((mp, (np_ // bn) * LANE),
+                                          jnp.int32))
+
     out = pl.pallas_call(
         functools.partial(_pim_matmul_fused_kernel, n_k=n_k, pa=pa, pw=pw,
-                          has_bias=has_bias, lane_pad=lane_pad),
+                          has_bias=has_bias, lane_pad=lane_pad,
+                          want_rowsum=want_rowsum),
         grid=(mp // bm, np_ // bn, n_k),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(*inputs)
+    if want_rowsum:
+        out, partials = out
+        # lane 0 of each j block carries that tile's partial; int32
+        # wraparound addition is associative, so this fold is bit-equal
+        # to the in-kernel accumulation order
+        rowsum = partials.reshape(mp, np_ // bn, LANE)[:m, :, 0].sum(
+            axis=1, dtype=jnp.int32)
+        return out[:m, :n], rowsum
     return out[:m, :n]

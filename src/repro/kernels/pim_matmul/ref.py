@@ -27,16 +27,22 @@ def pim_matmul_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray
 
 def pim_matmul_fused_ref(a_planes: jnp.ndarray, w_planes: jnp.ndarray,
                          a_scale: jnp.ndarray, w_scale: jnp.ndarray,
-                         bias: jnp.ndarray = None) -> jnp.ndarray:
+                         bias: jnp.ndarray = None,
+                         want_rowsum: bool = False):
     """Oracle for the fused dequant epilogue: int32 shift-and-add, then
     (acc * a_scale) * w_scale (+ bias) in float32 — the exact op order the
     kernel epilogue uses. a_scale: (M, 1); w_scale: (1, N); bias: (1, N).
 
     Bit-identical to the kernel without bias. With bias, the compiled
     kernel contracts the trailing mul+add into an FMA (single rounding),
-    so outputs may differ from this eager reference by <= 1 ulp."""
+    so outputs may differ from this eager reference by <= 1 ulp.
+
+    ``want_rowsum`` additionally returns the (M,) int32 accumulator
+    row-sums (ABFT verification input) as a second output."""
     acc = pim_matmul_ref(a_planes, w_planes)
     out = acc.astype(jnp.float32) * a_scale * w_scale
     if bias is not None:
         out = out + bias
+    if want_rowsum:
+        return out, acc.sum(axis=1)
     return out

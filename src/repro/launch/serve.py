@@ -54,6 +54,7 @@ Run (reduced, CPU):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 import warnings
@@ -101,8 +102,22 @@ def plan_params_for_pim(params, cfg: PimConfig):
     keep quantize-dequantize fake-quantization so every substrate still
     models their cell-density programming."""
     sub = engine.get_substrate(cfg.resolved_substrate)
-    plan_stack = jax.vmap(lambda w: sub.program(w, cfg))
-    plan_expert_stack = jax.vmap(lambda w: sub.program_experts(w, cfg))
+
+    def _cfg_for(keys):
+        # with ABFT verification on, each planned weight gets its tree
+        # path as violation-report tag so the reliability layer can map a
+        # checksum violation back to the plan subtree to re-program
+        if cfg.verify == "off" or cfg.abft_tag is not None:
+            return cfg
+        return dataclasses.replace(cfg, abft_tag="/".join(keys))
+
+    def plan_stack(v, keys):
+        c = _cfg_for(keys)
+        return jax.vmap(lambda w: sub.program(w, c))(v)
+
+    def plan_expert_stack(v, keys):
+        c = _cfg_for(keys)
+        return jax.vmap(lambda w: sub.program_experts(w, c))(v)
 
     def _will_plan(keys, name, x) -> bool:
         if not any(k in _PLANNED_BLOCKS for k in keys):
@@ -123,8 +138,8 @@ def plan_params_for_pim(params, cfg: PimConfig):
             if isinstance(v, dict):
                 out[k] = _program_block(v, keys + [k])
             elif _will_plan(keys + [k], k, v):
-                out[k] = (plan_expert_stack(v) if v.ndim == 4
-                          else plan_stack(v))
+                out[k] = (plan_expert_stack(v, keys + [k]) if v.ndim == 4
+                          else plan_stack(v, keys + [k]))
             elif _quantizable(k, v):
                 out[k] = fake_quantize(v, cfg.weight_bits, axis=(v.ndim - 2,))
             else:
@@ -243,6 +258,7 @@ def _pim_params(params, cfg: ModelConfig, pim_cfg: PimConfig,
     want = {"substrate": pim_cfg.resolved_substrate,
             "weight_bits": pim_cfg.weight_bits,
             "act_bits": pim_cfg.act_bits,
+            "abft": pim_cfg.verify,
             "arch": cfg.name,
             "num_layers": cfg.num_layers,
             "d_model": cfg.d_model,
@@ -325,7 +341,8 @@ def _setup(arch: str, layers: Optional[int], d_model: Optional[int],
            pim: bool, pim_bits: int, pim_emulate: bool,
            pim_substrate: Optional[str], plan_dir: Optional[str],
            mesh_spec: Optional[str] = None,
-           compile_cache_dir: Optional[str] = None):
+           compile_cache_dir: Optional[str] = None,
+           abft: str = "off"):
     """Shared serve bring-up: config reduction, param init, and (with
     ``pim``) weight programming — identical for both serving modes, so
     continuous mode streams past exactly the plans static mode uses.
@@ -347,7 +364,7 @@ def _setup(arch: str, layers: Optional[int], d_model: Optional[int],
     params = init_lm(cfg, jax.random.PRNGKey(0))
     substrate = _resolve_substrate(pim_substrate, pim_emulate)
     pim_cfg = PimConfig(weight_bits=pim_bits, act_bits=pim_bits,
-                        substrate=substrate)
+                        substrate=substrate, verify=abft)
     if pim:
         params = _pim_params(params, cfg, pim_cfg, plan_dir, mesh=mesh,
                              mesh_spec=mesh_spec or None)
@@ -519,11 +536,13 @@ def _load_trace(trace_file: str, vocab: int, seed: int) -> List[Any]:
             raise ValueError(
                 f"trace record {i} in {trace_file} needs either "
                 f"'tokens' or 'prompt_len': {rec}")
+        deadline = rec.get("deadline")
         reqs.append(Request(
             request_id=rec.get("id", i), tokens=toks,
             max_new_tokens=int(rec["gen"]),
             arrival=float(rec.get("arrival", 0.0)),
-            shared_prefix_len=int(rec.get("shared_prefix_len", 0))))
+            shared_prefix_len=int(rec.get("shared_prefix_len", 0)),
+            deadline=float(deadline) if deadline is not None else None))
     return reqs
 
 
@@ -544,7 +563,11 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                      eos_token: Optional[int] = None,
                      prefill_chunk: Optional[int] = None,
                      prefix_cache: int = 0,
-                     shared_prefix: int = 0) -> Dict[str, Any]:
+                     shared_prefix: int = 0,
+                     abft: str = "off",
+                     inject_faults: Optional[str] = None,
+                     admission_policy: str = "fifo",
+                     chaos_check: bool = False) -> Dict[str, Any]:
     """Continuous-batching serve: requests with heterogeneous arrival
     times and prompt/generation lengths stream through a fixed pool of
     ``num_slots`` decode slots backed by the same programmed plans the
@@ -566,13 +589,31 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     ``shared_prefix`` prepends a common random prefix of that length to
     every synthetic prompt — the shared-system-prompt traffic shape the
     prefix cache exists for.
+
+    Reliability knobs (see :mod:`repro.reliability`): ``abft`` stamps an
+    ABFT column-checksum verify policy ("off" | "sample" | "always") on
+    every programmed plan (requires ``pim``); ``inject_faults`` loads a
+    fault-spec JSON and corrupts the programmed plans before serving —
+    the ABFT checks detect the corruption at execute time and the
+    engine's degradation machine retries the affected dispatch on the
+    golden exact fallback, so completions stay correct; ``chaos_check``
+    additionally runs the same trace fault-free first and asserts the
+    injected run produced identical tokens and at least one detection.
     """
     from repro.serving import ContinuousScheduler, poisson_trace
     if shared_prefix < 0:
         raise ValueError("shared_prefix must be >= 0")
+    if inject_faults and not pim:
+        raise ValueError("--inject-faults requires --pim (faults target "
+                         "programmed plans)")
+    if inject_faults and abft == "off":
+        raise ValueError("--inject-faults requires --abft sample|always "
+                         "(without checksum verification the corruption "
+                         "would go undetected)")
     cfg, params, substrate, pim_cfg, dev_mesh = _setup(
         arch, layers, d_model, pim, pim_bits, pim_emulate, pim_substrate,
-        plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir)
+        plan_dir, mesh_spec=mesh, compile_cache_dir=compile_cache_dir,
+        abft=abft)
     if trace_file:
         requests = _load_trace(trace_file, cfg.vocab_size, seed)
         if not requests:
@@ -596,6 +637,31 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
     if sanitize:
         from repro.analysis.sanitize import Sanitizer
         sanitizer = Sanitizer(transfer_guard=True)
+    golden_tokens = None
+    if chaos_check:
+        # fault-free reference pass over the same trace and plans: the
+        # injected run below must reproduce these tokens bit-for-bit
+        # through detection + fallback retry
+        from repro.reliability import FAULT_LOG
+        golden_sched = ContinuousScheduler(
+            params, cfg, num_slots=num_slots, prompt_pad=prompt_pad,
+            max_len=max_len, sync_every=sync_every, mesh=dev_mesh,
+            stop_tokens=stop_tokens, eos_token=eos_token,
+            prefill_chunk=prefill_chunk,
+            admission_policy=admission_policy)
+        golden_sched.warmup()
+        golden_tokens = golden_sched.run(requests).tokens_by_id()
+        FAULT_LOG.clear()
+    manager = None
+    if inject_faults or abft != "off":
+        # ABFT without a fault spec still arms the manager: checks are
+        # counted, violations drain per dispatch, and the metrics report
+        # gains its reliability section (all zeros on a clean run)
+        from repro.reliability import (ReliabilityManager,
+                                       ReliabilityPolicy, load_fault_spec)
+        models = load_fault_spec(inject_faults) if inject_faults else []
+        manager = ReliabilityManager(
+            params, models, ReliabilityPolicy(verify=abft))
     sched = ContinuousScheduler(params, cfg, num_slots=num_slots,
                                 prompt_pad=prompt_pad, max_len=max_len,
                                 sync_every=sync_every, mesh=dev_mesh,
@@ -603,7 +669,9 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
                                 stop_tokens=stop_tokens,
                                 eos_token=eos_token,
                                 prefill_chunk=prefill_chunk,
-                                prefix_cache=prefix_cache)
+                                prefix_cache=prefix_cache,
+                                admission_policy=admission_policy,
+                                reliability=manager)
     if sanitizer is not None:
         # every steady-state decode dispatch runs under
         # transfer_guard("disallow"), and the compile sentinel proves
@@ -624,8 +692,32 @@ def serve_continuous(arch: str, num_slots: int = 4, num_requests: int = 16,
         run = sched.run(requests)
 
     result: Dict[str, Any] = dict(run.metrics)
+    if manager is not None:
+        result["fault_spec"] = inject_faults
+        result["injection_report"] = manager.injection_report
+    if golden_tokens is not None:
+        got = run.tokens_by_id()
+        mismatched = [rid for rid, toks in golden_tokens.items()
+                      if not np.array_equal(got.get(rid), toks)]
+        rel = run.metrics.get("reliability") or {}
+        detectable = sum(
+            1 for e in (manager.injection_report if manager else [])
+            if e.get("store_delta", 0) > 0)
+        chaos = {"token_mismatches": len(mismatched),
+                 "detectable_faults": detectable,
+                 "detections": rel.get("detections", 0)}
+        result["chaos_check"] = chaos
+        if mismatched:
+            raise AssertionError(
+                f"chaos check failed: {len(mismatched)} request(s) "
+                f"diverged from the fault-free run ({mismatched[:5]})")
+        if detectable and not chaos["detections"]:
+            raise AssertionError(
+                "chaos check failed: faults were injected "
+                f"({detectable} detectable) but ABFT reported no "
+                "detection")
     if sanitizer is not None:
-        result["sanitize"] = {"transfer_guard": True,
+        result["sanitize"] = {**sanitizer.report(),
                               "compiles": dict(counter.counts)}
     result["arch"] = cfg.name
     if mesh:
@@ -729,6 +821,30 @@ def main() -> None:
                     help="prepend a common random prefix of LEN tokens "
                          "to every synthetic prompt (continuous mode; "
                          "the shared-system-prompt traffic shape)")
+    ap.add_argument("--abft", default="off",
+                    choices=("off", "sample", "always"),
+                    help="ABFT column-checksum verification on every "
+                         "programmed plan (requires --pim): 'sample' "
+                         "checks one deterministic row per matmul, "
+                         "'always' checks every row; violations feed "
+                         "the reliability layer (continuous mode)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC.json",
+                    help="fault-injection spec (see repro.reliability."
+                         "load_fault_spec): corrupt the programmed "
+                         "plans before serving — stuck nibble planes, "
+                         "ADC drift, dropped WDM chunks, bit-flips. "
+                         "Requires --pim and --abft; detected "
+                         "violations retry on the golden exact "
+                         "fallback (continuous mode)")
+    ap.add_argument("--chaos-check", action="store_true",
+                    help="with --inject-faults: run the trace fault-"
+                         "free first and assert the injected run "
+                         "produced identical tokens and >=1 detection")
+    ap.add_argument("--admission-policy", default="fifo",
+                    choices=("fifo", "sjf"),
+                    help="admission order (continuous mode): 'sjf' lets "
+                         "a short prompt jump a long chunked-prefill "
+                         "admission instead of strict FIFO")
     ap.add_argument("--metrics-json", default=None,
                     help="write the structured run metrics to this path")
     ap.add_argument("--sanitize", action="store_true",
@@ -756,7 +872,19 @@ def main() -> None:
             stop_tokens=stop_tokens, eos_token=args.eos_token,
             prefill_chunk=args.prefill_chunk,
             prefix_cache=args.prefix_cache,
-            shared_prefix=args.shared_prefix)
+            shared_prefix=args.shared_prefix,
+            abft=args.abft, inject_faults=args.inject_faults,
+            admission_policy=args.admission_policy,
+            chaos_check=args.chaos_check)
+        if res.get("reliability"):
+            rel = res["reliability"]
+            print(f"[serve] reliability: {rel['injected_faults']} faults "
+                  f"injected, {rel['checks']} checks, "
+                  f"{rel['detections']} detections, {rel['retries']} "
+                  f"retries, {rel['repairs']} repairs, "
+                  f"degraded={rel['degraded']}")
+        if res.get("chaos_check"):
+            print(f"[serve] chaos check passed: {res['chaos_check']}")
         if args.sanitize:
             print(f"[serve] sanitize: transfer guard armed, compiles "
                   f"{res['sanitize']['compiles']}")

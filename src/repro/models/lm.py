@@ -29,6 +29,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import ssm as ssm_mod
+from repro.reliability import abft as abft_mod
 from repro.models.layers import (Params, dense_init, embed, embedding_init,
                                  mlp_apply, mlp_init, rms_norm, unembed)
 from repro.models.moe import moe_apply, moe_init
@@ -164,6 +165,9 @@ def _stack(cfg: ModelConfig, layers: Params, x: jax.Array, positions,
         return (x, lb + aux.get("moe_lb_loss", 0.0),
                 z + aux.get("moe_z_loss", 0.0)), None
 
+    # one ABFT collect scope per layer step: a verified-plan forward pays
+    # a single guarded fault report per layer instead of one per matmul
+    body = abft_mod.collected(body)
     if cfg.remat:
         policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
         body = jax.checkpoint(body, policy=policy)
@@ -308,7 +312,10 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
         x = constrain(x, "act_btd")
         return (x,), ys
 
-    (x,), caches = jax.lax.scan(
+    # layer steps thread their ABFT violation counts out through the scan
+    # and re-report them in this trace, where the serving engine's
+    # deferred scope absorbs them effect-free (see abft.verified_scan)
+    (x,), caches = abft_mod.verified_scan(
         body, (x,), (params["layers"], windows),
         unroll=cfg.num_layers if cfg.unroll_layers else 1)
     for key in cache:
@@ -381,7 +388,7 @@ def prefill_chunk(params: Params, cfg: ModelConfig,
             x = x + _ffn(cfg, lp, h, {})
         return (x,), ys
 
-    (x,), new_cache = jax.lax.scan(
+    (x,), new_cache = abft_mod.verified_scan(
         body, (x,), (params["layers"], windows, cache),
         unroll=cfg.num_layers if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)
@@ -440,7 +447,7 @@ def decode_step(params: Params, cfg: ModelConfig,
             x = x + _ffn(cfg, lp, h, {})
         return (x,), ys
 
-    (x,), new_cache = jax.lax.scan(
+    (x,), new_cache = abft_mod.verified_scan(
         body, (x,), (params["layers"], windows, cache),
         unroll=cfg.num_layers if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm_d"], cfg.norm_eps)

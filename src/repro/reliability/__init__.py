@@ -1,0 +1,46 @@
+"""Reliability layer: fault injection, ABFT verification, degradation.
+
+Three pieces (ISSUE 10 / DESIGN.md "silent-error story"):
+
+  :mod:`repro.reliability.faults`   deterministic fault injection into
+                                    programmed plan trees.
+  :mod:`repro.reliability.abft`     programming-time column checksums +
+                                    execute-time verification, reported
+                                    through the process-global FAULT_LOG.
+  :mod:`repro.reliability.degrade`  the serving engine's retry /
+                                    quarantine-and-re-program / degrade
+                                    state machine.
+"""
+from repro.reliability.abft import (FAULT_LOG, ChecksumViolation,
+                                    CollectScope, FaultLog, VERIFY_MODES,
+                                    checksums, collect_scope, collected,
+                                    deliver, raise_if_violations,
+                                    verified_scan)
+from repro.reliability.degrade import (ReliabilityManager, ReliabilityPolicy,
+                                       retarget_plans)
+from repro.reliability.faults import (FaultModel, dump_fault_spec,
+                                      inject_dense, inject_tree,
+                                      load_fault_spec, summarize)
+
+__all__ = [
+    "FAULT_LOG",
+    "ChecksumViolation",
+    "CollectScope",
+    "FaultLog",
+    "FaultModel",
+    "ReliabilityManager",
+    "ReliabilityPolicy",
+    "VERIFY_MODES",
+    "checksums",
+    "collect_scope",
+    "collected",
+    "deliver",
+    "dump_fault_spec",
+    "inject_dense",
+    "inject_tree",
+    "load_fault_spec",
+    "raise_if_violations",
+    "retarget_plans",
+    "summarize",
+    "verified_scan",
+]

@@ -1,0 +1,253 @@
+"""Deterministic fault injection into programmed PIM plans.
+
+Models the silent-error modes of the optical datapath as mutations of a
+*programmed* plan tree — faults land in the stationary stores, exactly
+where OPIMA's MRR/PCM arrays would take them:
+
+  ``bitflips``        bit-flips in the stored int codes. Mutates
+                      ``values`` and re-derives the nibble planes from
+                      the corrupted codes (the device is re-programmed
+                      from a corrupted code store).
+  ``stuck_planes``    a stuck nibble plane: one base-16 digit plane of
+                      one output column reads a constant. Device-store
+                      fault — ``planes`` only; the code store keeps the
+                      intended values.
+  ``dropped_chunks``  a WDM chunk of ``cfg.wdm_chunk`` wavelengths goes
+                      dark: that K-range of every plane reads zero.
+  ``adc_gain`` /      multiplicative / additive drift on the per-column
+  ``adc_offset``      dequantization scales (thermal ADC drift).
+
+Injection is a pure function of ``(spec, plan path)``: every plan gets
+its own ``np.random.default_rng`` seeded from the model seed and a
+stable hash of its tree path, so a fault spec reproduces bit-for-bit
+across runs, processes, and machines. The plan's ABFT checksum record
+(:mod:`repro.reliability.abft`), programmed before injection, is never
+touched — it is the golden reference detection compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+from repro.quant import nibbles
+
+_MAX_DIGIT = nibbles.NIBBLE_BASE - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One injected fault pattern, targeted by a glob over plan paths."""
+
+    target: str = "*"          # fnmatch glob over tree paths
+    seed: int = 0
+    bitflips: int = 0          # flips in stored codes (per matched plan)
+    stuck_planes: int = 0      # stuck digit-plane/column pairs
+    stuck_value: int = 0       # the value a stuck plane reads
+    dropped_chunks: int = 0    # dark WDM chunks
+    adc_gain: float = 1.0      # multiplicative scale drift
+    adc_offset: float = 0.0    # additive scale drift
+    sticky: bool = True        # survives re-programming (hard fault)
+
+    @property
+    def is_noop(self) -> bool:
+        return (self.bitflips == 0 and self.stuck_planes == 0
+                and self.dropped_chunks == 0 and self.adc_gain == 1.0
+                and self.adc_offset == 0.0)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultModel":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown fault spec field(s) "
+                             f"{sorted(unknown)}; known: {sorted(known)}")
+        return cls(**d)
+
+
+def load_fault_spec(path: str) -> List[FaultModel]:
+    """Load a JSON fault spec: either a list of fault dicts or
+    ``{"faults": [...]}`` (the ``serve --inject-faults`` format)."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        data = data.get("faults", [])
+    if not isinstance(data, list):
+        raise ValueError(f"fault spec {path} must be a list of fault "
+                         "objects or {'faults': [...]}")
+    return [FaultModel.from_dict(d) for d in data]
+
+
+def dump_fault_spec(models: Sequence[FaultModel]) -> str:
+    return json.dumps({"faults": [m.to_dict() for m in models]}, indent=2)
+
+
+def _rng_for(model: FaultModel, path: str) -> np.random.Generator:
+    digest = hashlib.sha256(f"{model.seed}:{path}".encode()).digest()
+    return np.random.default_rng(int.from_bytes(digest[:8], "little"))
+
+
+def _plane_colsums(planes: np.ndarray) -> np.ndarray:
+    """Recombined column sums of a (..., Pw, Kp, Np) plane store:
+    sum_n sum_d 16^d * planes[..., d, k, n] -> (..., Kp) int64."""
+    pw = planes.shape[-3]
+    shifts = (nibbles.NIBBLE_BASE ** np.arange(pw)).astype(np.int64)
+    per_plane = planes.astype(np.int64).sum(axis=-1)       # (..., Pw, Kp)
+    return np.einsum("p,...pk->...k", shifts, per_plane)
+
+
+def _store_delta(planes: np.ndarray, plan: pim.DensePlan) -> Optional[int]:
+    """How many checksum-column entries the mutated store now disagrees
+    with — the host-side detectability measure the chaos tests assert
+    against (0 means the injected pattern cancelled out exactly)."""
+    if plan.abft is None:
+        return None
+    live = _plane_colsums(planes)                          # (..., Kp)
+    col = np.asarray(plan.abft["col_i32"], np.int64)       # (..., K)
+    expected = np.zeros(live.shape, np.int64)
+    expected[..., :plan.k] = col
+    return int(np.sum(live != expected))
+
+
+def inject_dense(plan: pim.DensePlan, model: FaultModel, path: str
+                 ) -> Tuple[pim.DensePlan, List[Dict[str, Any]]]:
+    """Apply ``model`` to one dense plan (possibly layer/expert-stacked:
+    leaves may carry leading batch dims). Returns the mutated plan and a
+    report of every injected fault."""
+    if model.is_noop:
+        return plan, []
+    k, n = plan.k, plan.n
+    values = np.array(jnp.asarray(plan.values))            # (..., K, N)
+    planes = np.array(jnp.asarray(plan.planes))            # (..., Pw,Kp,Np)
+    scale = np.array(jnp.asarray(plan.scale))
+    padded_scale = np.array(jnp.asarray(plan.padded_scale))
+    lead = values.shape[:-2]
+    b_count = int(np.prod(lead)) if lead else 1
+    vals_r = values.reshape(b_count, k, n)
+    pw, kp, np_ = planes.shape[-3:]
+    planes_r = planes.reshape(b_count, pw, kp, np_)
+    rng = _rng_for(model, path)
+    report: List[Dict[str, Any]] = []
+
+    def _reprogram(b: int) -> None:
+        # the device is re-programmed from the (corrupted) code store:
+        # re-derive the nibble planes so both stores stay coherent
+        pl = np.asarray(nibbles.to_nibbles(vals_r[b], plan.bits))
+        planes_r[b] = np.pad(pl, ((0, 0), (0, kp - k), (0, np_ - n)))
+
+    for _ in range(model.bitflips):
+        b = int(rng.integers(b_count))
+        ki = int(rng.integers(k))
+        ni = int(rng.integers(n))
+        bit = int(rng.integers(max(plan.bits - 1, 1)))
+        code = int(vals_r[b, ki, ni])
+        sign = -1 if code < 0 else (1 if code > 0
+                                    else (1 if rng.integers(2) else -1))
+        vals_r[b, ki, ni] = sign * (abs(code) ^ (1 << bit))
+        _reprogram(b)
+        report.append({"path": path, "kind": "bitflip",
+                       "where": [b, ki, ni], "bit": bit})
+
+    for _ in range(model.stuck_planes):
+        b = int(rng.integers(b_count))
+        d = int(rng.integers(pw))
+        ni = int(rng.integers(n))
+        v = int(np.clip(model.stuck_value, -_MAX_DIGIT, _MAX_DIGIT))
+        planes_r[b, d, :, ni] = v
+        report.append({"path": path, "kind": "stuck_plane",
+                       "where": [b, d, ni], "value": v})
+
+    chunk = max(int(plan.cfg.wdm_chunk), 1)
+    n_chunks = max((kp + chunk - 1) // chunk, 1)
+    for _ in range(model.dropped_chunks):
+        b = int(rng.integers(b_count))
+        c = int(rng.integers(n_chunks))
+        planes_r[b, :, c * chunk:(c + 1) * chunk, :] = 0
+        report.append({"path": path, "kind": "dropped_chunk",
+                       "where": [b, c], "k_range": [c * chunk,
+                                                    min((c + 1) * chunk, kp)]})
+
+    if model.adc_gain != 1.0 or model.adc_offset != 0.0:
+        scale = scale * model.adc_gain + model.adc_offset
+        padded_scale = padded_scale.copy()
+        padded_scale[..., :n] = (padded_scale[..., :n] * model.adc_gain
+                                 + model.adc_offset)
+        report.append({"path": path, "kind": "adc_drift",
+                       "gain": model.adc_gain, "offset": model.adc_offset})
+
+    delta = _store_delta(planes, plan)
+    for entry in report:
+        entry["sticky"] = model.sticky
+        if delta is not None:
+            entry["store_delta"] = delta
+    new = dataclasses.replace(
+        plan,
+        values=jnp.asarray(vals_r.reshape(values.shape), plan.values.dtype),
+        planes=jnp.asarray(planes_r.reshape(planes.shape),
+                           plan.planes.dtype),
+        scale=jnp.asarray(scale, plan.scale.dtype),
+        padded_scale=jnp.asarray(padded_scale, plan.padded_scale.dtype))
+    return new, report
+
+
+def inject_tree(tree: Any, models: Sequence[FaultModel], *,
+                sticky_only: bool = False, _path: str = ""
+                ) -> Tuple[Any, List[Dict[str, Any]]]:
+    """Walk a params tree, applying every matching fault model to every
+    dense plan (expert stacks included). Paths are slash-joined container
+    keys — the same naming ``ReliabilityManager`` uses for quarantine and
+    the fault spec's ``target`` globs match against. ``sticky_only``
+    restricts to hard faults (used when re-injecting after a repair)."""
+    if isinstance(tree, pim.ExpertStackedPlan):
+        dense, report = inject_tree(tree.dense, models,
+                                    sticky_only=sticky_only, _path=_path)
+        if not report:
+            return tree, []
+        return dataclasses.replace(tree, dense=dense), report
+    if isinstance(tree, pim.DensePlan):
+        plan, report = tree, []
+        for model in models:
+            if sticky_only and not model.sticky:
+                continue
+            if fnmatch.fnmatchcase(_path, model.target):
+                plan, rep = inject_dense(plan, model, _path)
+                report += rep
+        return plan, report
+    if isinstance(tree, dict):
+        out, report = {}, []
+        for key, val in tree.items():
+            sub = f"{_path}/{key}" if _path else str(key)
+            out[key], rep = inject_tree(val, models,
+                                        sticky_only=sticky_only, _path=sub)
+            report += rep
+        return out, report
+    if isinstance(tree, (list, tuple)):
+        items, report = [], []
+        for i, val in enumerate(tree):
+            sub = f"{_path}/{i}" if _path else str(i)
+            item, rep = inject_tree(val, models,
+                                    sticky_only=sticky_only, _path=sub)
+            items.append(item)
+            report += rep
+        return (items if isinstance(tree, list) else tuple(items)), report
+    # arrays, DepthwisePlan (no LM serving path), scalars: untouched
+    return tree, []
+
+
+def summarize(report: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    by_kind: Dict[str, int] = {}
+    paths = set()
+    for entry in report:
+        by_kind[entry["kind"]] = by_kind.get(entry["kind"], 0) + 1
+        paths.add(entry["path"])
+    return {"total": len(report), "by_kind": by_kind,
+            "plans": sorted(paths)}

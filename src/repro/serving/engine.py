@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
@@ -64,6 +65,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.reliability import abft
 from repro.serving import slots as slots_mod
 from repro.serving.prefix import Prefix, PrefixCache, PrefixEntry, token_key
 
@@ -81,6 +83,7 @@ class SlotView:
     max_new_tokens: int
     done: bool = False
     stop_reason: Optional[str] = None   # "eos" | "stop_token" | "budget"
+    #                                     | "deadline" (scheduler-set)
 
     @property
     def budget_left(self) -> int:
@@ -160,7 +163,7 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache_capacity: int = 0,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 sanitizer=None):
+                 sanitizer=None, reliability=None):
         slots_mod.check_slot_compatible(cfg)
         if prompt_pad > max_len:
             raise ValueError(f"prompt_pad={prompt_pad} exceeds "
@@ -210,9 +213,20 @@ class ServingEngine:
             else:
                 self._slot_spec = PartitionSpec()
                 self._vec_spec = PartitionSpec()
+        # duck-typed repro.reliability.degrade.ReliabilityManager: arms
+        # ABFT-verified serving with retry-on-fallback, quarantine/
+        # re-program, and degraded-but-correct mode. When armed the
+        # decode/window fns give up cache donation (one extra KV copy per
+        # dispatch) so a violated dispatch can be retried from the
+        # pre-dispatch cache, and every step fn gets an exact-substrate
+        # fallback twin (``*_fb``, traced on the golden params).
+        self.reliability = reliability
+        if reliability is not None:
+            self.params = reliability.serving_params()
         self.prefill_traces = 0
         self.insert_traces = 0
         self.decode_traces = 0
+        self.fallback_traces = 0
         self._build_step_fns()
 
     # ------------------------------------------------------------------
@@ -249,39 +263,59 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # compiled step functions (each traced exactly once)
     # ------------------------------------------------------------------
+    def _verified_jit(self, fn, key: str, **jit_kwargs):
+        """jit ``fn`` under a deferred ABFT collect scope: the per-tag
+        violation counts of every verified matmul in the dispatch come
+        back as an ordinary extra output, fetched and handed to the
+        FAULT_LOG host-side. The clean path stays completely effect-free
+        (no host callback in the jaxpr, C++ dispatch fastpath intact) —
+        this is what keeps checksum-on overhead inside the <5% budget.
+        The returned callable has ``fn``'s signature and return value;
+        when no tag is armed (verify off / fallback twins) the counts
+        vector is empty and delivery is skipped."""
+        def wrapped(*args):
+            with abft.collect_scope(defer=True) as s:
+                out = fn(*args)
+            self._abft_names[key] = s.names   # populated at trace time
+            return out, s.counts()
+        # the compile-once sentinel budgets traces by function name
+        wrapped.__name__ = fn.__name__
+        jitted = jax.jit(wrapped, **jit_kwargs)
+
+        def call(*args):
+            out, counts = jitted(*args)
+            names = self._abft_names.get(key, ())
+            if names:
+                abft.deliver(names, counts)
+            return out
+        return call
+
     def _build_step_fns(self) -> None:
         cfg, pad = self.cfg, self.prompt_pad
         stop_arr = self._stop_arr
+        armed = self.reliability is not None
+        self._abft_names: Dict[str, tuple] = {}
 
-        def prefill(params, toks, length):
-            # trace-time side effect: counts retraces, not executions
-            self.prefill_traces += 1
+        def _prefill_raw(params, toks, length):
             logits, pcache = lm.prefill(
                 params, cfg, {"tokens": toks}, max_len=pad,
                 cache_dtype=self.cache_dtype, logits_index=length - 1)
             tok0 = jnp.argmax(logits, -1).astype(jnp.int32)[0]
             return tok0, {"k": pcache["k"], "v": pcache["v"]}
 
-        def prefill_chunk(params, scratch, toks, start, logits_index):
-            self.prefill_traces += 1
+        def _chunk_raw(params, scratch, toks, start, logits_index):
             logits, scratch = lm.prefill_chunk(
                 params, cfg, scratch, toks, start,
                 logits_index=logits_index)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)[0]
             return tok, scratch
 
-        def insert(cache, k, v, slot, length):
-            self.insert_traces += 1
-            return slots_mod.write_prefill(cache, {"k": k, "v": v}, slot,
-                                           length)
-
-        def decode(params, cache, toks, pos):
-            self.decode_traces += 1
+        def _decode_raw(params, cache, toks, pos):
             logits, cache = lm.decode_step(params, cfg, cache, toks, pos)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
             return nxt, lm.token_stop_mask(nxt, stop_arr), cache
 
-        def decode_window(params, cache, toks, pos, done, left, window_len):
+        def _window_raw(params, cache, toks, pos, done, left, window_len):
             # sync_every > 1: a fixed-length window of fused decode steps
             # runs on-device between host syncs. Per-slot masking keeps
             # ragged tails fused: step i only advances rows that are not
@@ -290,8 +324,6 @@ class ServingEngine:
             # token, same position -> bit-identical KV rewrite). Stop
             # tokens flip ``done`` the step they are emitted, so nothing
             # after a stop token is ever marked valid.
-            self.decode_traces += 1
-
             def body(carry, i):
                 toks, cache, pos, done, left = carry
                 logits, cache = lm.decode_step(params, cfg, cache, toks,
@@ -305,21 +337,88 @@ class ServingEngine:
                 pos = jnp.where(active, pos + 1, pos)
                 return (toks, cache, pos, done, left), (nxt, active)
 
-            (_, cache, _, done, _), (toks_seq, valid_seq) = jax.lax.scan(
-                body, (toks, cache, pos, done, left),
-                jnp.arange(self.sync_every, dtype=jnp.int32))
+            # thread per-step ABFT counts out of the window scan so the
+            # dispatch-level deferred scope sees them (scan bodies trace
+            # under their own trace — see abft.verified_scan)
+            (_, cache, _, done, _), (toks_seq, valid_seq) = (
+                abft.verified_scan(
+                    body, (toks, cache, pos, done, left),
+                    jnp.arange(self.sync_every, dtype=jnp.int32)))
             return toks_seq, valid_seq, cache
+
+        def prefill(params, toks, length):
+            # trace-time side effect: counts retraces, not executions
+            self.prefill_traces += 1
+            return _prefill_raw(params, toks, length)
+
+        def prefill_chunk(params, scratch, toks, start, logits_index):
+            self.prefill_traces += 1
+            return _chunk_raw(params, scratch, toks, start, logits_index)
+
+        def insert(cache, k, v, slot, length):
+            self.insert_traces += 1
+            return slots_mod.write_prefill(cache, {"k": k, "v": v}, slot,
+                                           length)
+
+        def decode(params, cache, toks, pos):
+            self.decode_traces += 1
+            return _decode_raw(params, cache, toks, pos)
+
+        def decode_window(params, cache, toks, pos, done, left, window_len):
+            self.decode_traces += 1
+            return _window_raw(params, cache, toks, pos, done, left,
+                               window_len)
 
         # donate the slot cache: callers always rebind it to the returned
         # value, so XLA updates the KV buffers in place instead of
         # copying the whole (L, S, max_len, kv, hd) cache every step.
         # The chunk fn does NOT donate its scratch: prefix-cache entries
         # alias scratch snapshots and must outlive later chunks.
-        self._prefill_fn = jax.jit(prefill)
-        self._chunk_fn = jax.jit(prefill_chunk)
+        # With a reliability manager armed the decode/window fns also
+        # give up donation: the pre-dispatch cache must survive so a
+        # checksum-violated dispatch can be replayed on the fallback.
+        decode_donate = () if armed else (1,)
+        self._prefill_fn = self._verified_jit(prefill, "prefill")
+        self._chunk_fn = self._verified_jit(prefill_chunk, "chunk")
         self._insert_fn = jax.jit(insert, donate_argnums=(0,))
-        self._decode_fn = jax.jit(decode, donate_argnums=(1,))
-        self._window_fn = (jax.jit(decode_window, donate_argnums=(1,))
+        self._decode_fn = self._verified_jit(decode, "decode",
+                                             donate_argnums=decode_donate)
+        self._window_fn = (self._verified_jit(decode_window, "window",
+                                              donate_argnums=decode_donate)
+                           if self.sync_every > 1 else None)
+
+        if not armed:
+            self._prefill_fb = self._chunk_fb = None
+            self._decode_fb = self._window_fb = None
+            return
+
+        # exact-substrate fallback twins, traced on the golden params.
+        # Distinct function names keep them out of the compile-once
+        # sentinel's primary-name budget (they legitimately compile once
+        # each in addition to the primaries) and out of the primary
+        # trace counters.
+        def prefill_fb(params, toks, length):
+            self.fallback_traces += 1
+            return _prefill_raw(params, toks, length)
+
+        def prefill_chunk_fb(params, scratch, toks, start, logits_index):
+            self.fallback_traces += 1
+            return _chunk_raw(params, scratch, toks, start, logits_index)
+
+        def decode_fb(params, cache, toks, pos):
+            self.fallback_traces += 1
+            return _decode_raw(params, cache, toks, pos)
+
+        def decode_window_fb(params, cache, toks, pos, done, left,
+                             window_len):
+            self.fallback_traces += 1
+            return _window_raw(params, cache, toks, pos, done, left,
+                               window_len)
+
+        self._prefill_fb = self._verified_jit(prefill_fb, "prefill_fb")
+        self._chunk_fb = self._verified_jit(prefill_chunk_fb, "chunk_fb")
+        self._decode_fb = self._verified_jit(decode_fb, "decode_fb")
+        self._window_fb = (self._verified_jit(decode_window_fb, "window_fb")
                            if self.sync_every > 1 else None)
 
     # ------------------------------------------------------------------
@@ -376,6 +475,85 @@ class ServingEngine:
                 jax.device_put(np.int32(self.sync_every)))
             jax.block_until_ready(toks_seq)
         jax.block_until_ready((tok0, nxt))
+        if self.reliability is not None:
+            # pre-compile the fallback twins so a retry in the serving
+            # loop never pays a compile, then discard whatever checksum
+            # violations the warmup dispatches tripped (warmup tokens are
+            # throwaway; the degradation machine starts clean)
+            fb = self.reliability.fallback
+            if self.prefill_chunk is not None:
+                ftok, _ = self._chunk_fb(
+                    fb, self._init_scratch(),
+                    jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                    jnp.int32(0), jnp.int32(0))
+            else:
+                ftok, _ = self._prefill_fb(
+                    fb, jnp.zeros((1, self.prompt_pad), jnp.int32),
+                    jnp.int32(1))
+            fnxt, _, cache = self._decode_fb(fb, cache, tok_vec, pos_vec)
+            if self._window_fb is not None:
+                fseq, _, cache = self._window_fb(
+                    fb, cache,
+                    self._place_vec(np.zeros((self.num_slots, 1),
+                                             np.int32)),
+                    pos_vec, done, left,
+                    jax.device_put(np.int32(self.sync_every)))
+                jax.block_until_ready(fseq)
+            jax.block_until_ready((ftok, fnxt))
+            self.reliability.drain()
+
+    # ------------------------------------------------------------------
+    # reliability: drain / retry / repair around every verified dispatch
+    # ------------------------------------------------------------------
+    def _after_violation(self) -> None:
+        """Post-retry bookkeeping: quarantine-and-re-program plans whose
+        strike count came due; a repair mutates the live params, so the
+        prefix cache (KV is a function of tokens AND params) is flushed
+        and the engine rebinds the repaired tree (same treedef — no
+        retrace)."""
+        man = self.reliability
+        if man.maybe_repair():
+            self.params = man.params
+            if self.prefix_cache is not None:
+                self.prefix_cache.invalidate_all()
+
+    def _run_prefill(self, toks, length):
+        man = self.reliability
+        if man is None:
+            return self._prefill_fn(self.params, toks, length)
+        if man.degraded:
+            return self._prefill_fb(man.fallback, toks, length)
+        out = self._prefill_fn(self.params, toks, length)
+        bad = man.drain()
+        if bad:
+            man.record_violations(bad)
+            t0 = time.perf_counter()
+            out = self._prefill_fb(man.fallback, toks, length)
+            jax.block_until_ready(out[0])
+            man.note_retry(time.perf_counter() - t0)
+            self._after_violation()
+        return out
+
+    def _run_chunk(self, scratch, toks, start, li):
+        man = self.reliability
+        if man is None:
+            return self._chunk_fn(self.params, scratch, toks, start, li)
+        if man.degraded:
+            return self._chunk_fb(man.fallback, scratch, toks, start, li)
+        # the chunk fn never donates its scratch, so the pre-dispatch
+        # scratch is intact for the replay
+        tok, new_scratch = self._chunk_fn(self.params, scratch, toks,
+                                          start, li)
+        bad = man.drain()
+        if bad:
+            man.record_violations(bad)
+            t0 = time.perf_counter()
+            tok, new_scratch = self._chunk_fb(man.fallback, scratch, toks,
+                                              start, li)
+            jax.block_until_ready(tok)
+            man.note_retry(time.perf_counter() - t0)
+            self._after_violation()
+        return tok, new_scratch
 
     # ------------------------------------------------------------------
     # prefill
@@ -459,8 +637,8 @@ class ServingEngine:
         if self.prefill_chunk is None:
             padded = np.zeros((1, self.prompt_pad), np.int32)
             padded[0, :plen] = task.tokens
-            tok0, kv = self._prefill_fn(self.params, jnp.asarray(padded),
-                                        jnp.int32(plen))
+            tok0, kv = self._run_prefill(jnp.asarray(padded),
+                                         jnp.int32(plen))
             task.prefix = Prefix(length=plen,
                                  first_token=int(jax.device_get(tok0)),
                                  kv=kv, key=task.key)
@@ -472,8 +650,8 @@ class ServingEngine:
             last = (phase == len(task.phases) - 1 and
                     idx == len(starts) - 1)
             li = (plen - 1) - start if last else 0
-            tok, task.scratch = self._chunk_fn(
-                self.params, task.scratch, jnp.asarray(blk),
+            tok, task.scratch = self._run_chunk(
+                task.scratch, jnp.asarray(blk),
                 jnp.int32(start), jnp.int32(li))
             if idx + 1 < len(starts):
                 task.cursor = (phase, idx + 1)
@@ -598,20 +776,51 @@ class ServingEngine:
         guard = (self.sanitizer.decode_guard()
                  if self.sanitizer is not None
                  else contextlib.nullcontext())
+        man = self.reliability
+        degraded = man is not None and man.degraded
         if w > 1 and self._window_fn is not None:
             done_dev = self._place_vec(done_vec)
             left_dev = self._place_vec(left_vec)
             wlen_dev = jax.device_put(np.int32(w))
+            fn, fparams = ((self._window_fb, man.fallback) if degraded
+                           else (self._window_fn, self.params))
             with guard:
-                toks_dev, valid_dev, state.cache = self._window_fn(
-                    self.params, state.cache, tok_dev, pos_dev,
+                toks_dev, valid_dev, new_cache = fn(
+                    fparams, state.cache, tok_dev, pos_dev,
                     done_dev, left_dev, wlen_dev)
+            if man is not None and not degraded:
+                bad = man.drain()
+                if bad:
+                    # replay the whole window on the golden exact
+                    # fallback from the intact pre-dispatch cache
+                    man.record_violations(bad)
+                    t0 = time.perf_counter()
+                    toks_dev, valid_dev, new_cache = self._window_fb(
+                        man.fallback, state.cache, tok_dev, pos_dev,
+                        done_dev, left_dev, wlen_dev)
+                    jax.block_until_ready(toks_dev)
+                    man.note_retry(time.perf_counter() - t0)
+                    self._after_violation()
+            state.cache = new_cache
             toks_seq, valid_seq = jax.device_get((toks_dev, valid_dev))
         else:
             w = 1
+            fn, fparams = ((self._decode_fb, man.fallback) if degraded
+                           else (self._decode_fn, self.params))
             with guard:
-                nxt_dev, stop_dev, state.cache = self._decode_fn(
-                    self.params, state.cache, tok_dev, pos_dev)
+                nxt_dev, stop_dev, new_cache = fn(
+                    fparams, state.cache, tok_dev, pos_dev)
+            if man is not None and not degraded:
+                bad = man.drain()
+                if bad:
+                    man.record_violations(bad)
+                    t0 = time.perf_counter()
+                    nxt_dev, stop_dev, new_cache = self._decode_fb(
+                        man.fallback, state.cache, tok_dev, pos_dev)
+                    jax.block_until_ready(nxt_dev)
+                    man.note_retry(time.perf_counter() - t0)
+                    self._after_violation()
+            state.cache = new_cache
             nxt, _ = jax.device_get((nxt_dev, stop_dev))
             toks_seq = nxt[None]
             valid_seq = ~done_vec[None]

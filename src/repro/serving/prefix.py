@@ -79,6 +79,7 @@ class PrefixCache:
         self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
 
     def get(self, key: str) -> Optional[PrefixEntry]:
         entry = self._entries.get(key)
@@ -95,9 +96,20 @@ class PrefixCache:
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
 
+    def invalidate_all(self) -> int:
+        """Drop every entry (the params changed under the cache — e.g. a
+        quarantined plan was re-programmed). Cached KV is a function of
+        (tokens, params), so any params mutation makes all entries stale.
+        Returns the number of entries dropped."""
+        n = len(self._entries)
+        self._entries.clear()
+        self.invalidations += n
+        return n
+
     def __len__(self) -> int:
         return len(self._entries)
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries), "capacity": self.capacity}
+                "entries": len(self._entries), "capacity": self.capacity,
+                "invalidations": self.invalidations}

@@ -72,6 +72,11 @@ class Request:
     arrival: float = 0.0         # virtual-clock arrival time (steps)
     shared_prefix_len: int = 0   # shared-prefix boundary (e.g. system
     #                              prompt length) for prefix-cache reuse
+    deadline: Optional[float] = None  # absolute virtual-clock deadline:
+    #                              once the clock reaches it the request
+    #                              retires with stop_reason="deadline"
+    #                              (whatever tokens it has), freeing its
+    #                              slot — queued, admitting, or live
 
 
 @dataclasses.dataclass
@@ -164,16 +169,23 @@ class ContinuousScheduler:
                  stop_tokens: Sequence[int] = (),
                  eos_token: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: int = 0):
+                 prefix_cache: int = 0,
+                 admission_policy: str = "fifo",
+                 reliability=None):
         if max_prefills_per_step < 1:
             raise ValueError("max_prefills_per_step must be >= 1")
+        if admission_policy not in ("fifo", "sjf"):
+            raise ValueError(
+                f"admission_policy must be 'fifo' or 'sjf', got "
+                f"{admission_policy!r}")
         self.engine = ServingEngine(
             params, cfg, num_slots=num_slots, prompt_pad=prompt_pad,
             max_len=max_len, cache_dtype=cache_dtype,
             sync_every=sync_every, stop_tokens=stop_tokens,
             eos_token=eos_token, prefill_chunk=prefill_chunk,
             prefix_cache_capacity=prefix_cache, mesh=mesh,
-            sanitizer=sanitizer)
+            sanitizer=sanitizer, reliability=reliability)
+        self.admission_policy = admission_policy
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -228,6 +240,33 @@ class ContinuousScheduler:
                 raise ValueError(
                     f"request {r.request_id!r}: shared_prefix_len "
                     f"{r.shared_prefix_len} outside [0, {plen}]")
+            if r.deadline is not None and r.deadline <= r.arrival:
+                raise ValueError(
+                    f"request {r.request_id!r}: deadline {r.deadline} "
+                    f"must be after arrival {r.arrival}")
+
+    # ------------------------------------------------------------------
+    # admission-policy cost estimates (prefill units == compiled calls)
+    # ------------------------------------------------------------------
+    def _req_units(self, req: Request) -> int:
+        """Prefill units a not-yet-started request will need (upper
+        bound: a prefix-cache hit may shorten it)."""
+        if self.prefill_chunk is None:
+            return 1
+        plen = int(np.asarray(req.tokens).shape[0])
+        return max(-(-plen // self.prefill_chunk), 1)
+
+    @staticmethod
+    def _task_units_left(task: PrefillTask) -> int:
+        """Prefill units an in-flight task still needs."""
+        if task.finished:
+            return 0
+        if not task.phases:          # single-shot prefill: one call
+            return 1
+        total = sum(len(starts) for _, starts in task.phases)
+        phase, idx = task.cursor
+        done = sum(len(task.phases[p][1]) for p in range(phase)) + idx
+        return max(total - done, 1)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request],
@@ -251,7 +290,7 @@ class ContinuousScheduler:
         step = 0.0
         decode_steps = prefills = host_syncs = prefill_units = 0
         occupancy_acc = 0
-        reasons = {"budget": 0, "eos": 0, "stop_token": 0}
+        reasons = {"budget": 0, "eos": 0, "stop_token": 0, "deadline": 0}
         t0 = time.time()
 
         def finish(view: SlotView, req: Request, admit_at: float,
@@ -269,36 +308,101 @@ class ContinuousScheduler:
             completions.append(comp)
             cb.on_finish(comp)
 
+        def expire_unstarted(req: Request, slot: int, at: float) -> None:
+            # deadline passed before any token was produced: retire with
+            # an empty completion (admit_step==finish_step==now)
+            reasons["deadline"] += 1
+            comp = Completion(
+                request_id=req.request_id,
+                prompt=np.asarray(req.tokens, np.int32),
+                tokens=np.zeros((0,), np.int32),
+                arrival_step=req.arrival, admit_step=at,
+                finish_step=at, slot=slot, stop_reason="deadline",
+                first_token_wall_s=0.0,
+                finish_wall_s=time.time() - t0)
+            completions.append(comp)
+            cb.on_finish(comp)
+
+        def sweep_deadlines(now: float) -> None:
+            """Retire every request whose deadline the virtual clock has
+            reached — queued, mid-prefill, or live. Reserved slots are
+            freed, so an expiring request can never leak one; live slots
+            keep the tokens generated so far (enforcement is at scheduler
+            granularity: a fused decode window may overrun the deadline
+            by at most its clamped length)."""
+            for r in [r for r in ready
+                      if r.deadline is not None and now >= r.deadline]:
+                ready.remove(r)
+                expire_unstarted(r, -1, now)
+            for entry in [e for e in admitting
+                          if e[0].deadline is not None
+                          and now >= e[0].deadline]:
+                req, _task, slot = entry
+                admitting.remove(entry)
+                state.alloc.free(slot)
+                expire_unstarted(req, slot, now)
+            for slot in [s for s, v in live.items()
+                         if v[0].deadline is not None
+                         and now >= v[0].deadline]:
+                req, admit_at, first_wall = live.pop(slot)
+                view = state.slots.pop(slot)
+                state.alloc.free(slot)
+                view.done = True
+                view.stop_reason = "deadline"
+                finish(view, req, admit_at, first_wall, now)
+
         while pending or ready or admitting or state.slots:
             while pending and pending[0].arrival <= step:
                 ready.append(pending.popleft())
+            sweep_deadlines(step)
             if not ready and not admitting and not state.slots:
+                if not pending:
+                    break        # the sweep drained the last request
                 step = pending[0].arrival   # idle: jump to next arrival
                 continue
             # --- admission: up to max_prefills_per_step units of prefill
             # work per iteration — one unit == one compiled call, so a
             # chunked long prompt spreads across iterations and decode
-            # keeps running in between. In-flight tasks advance first
-            # (FIFO), then ready requests claim free slots.
+            # keeps running in between. Under "fifo", in-flight tasks
+            # advance first and ready requests claim free slots only when
+            # nothing is in flight. Under "sjf", a short ready request
+            # may open its own task while a long chunked admission is
+            # still in flight (slots permitting), and the in-flight task
+            # with the fewest remaining prefill units advances first —
+            # so a one-chunk prompt is not stuck behind a 16-chunk one.
+            sjf = self.admission_policy == "sjf"
             units = 0
             while units < self.max_prefills_per_step:
-                if admitting:
-                    req, task, slot = admitting[0]
-                elif ready:
-                    slot = state.alloc.alloc(ready[0].request_id)
+                start_new = bool(ready) and (
+                    not admitting or
+                    (sjf and state.alloc.num_free > 0 and
+                     min(self._req_units(r) for r in ready) <
+                     min(self._task_units_left(t) for _, t, _ in admitting)))
+                if start_new:
+                    pick = (min(range(len(ready)),
+                                key=lambda i: (self._req_units(ready[i]), i))
+                            if sjf else 0)
+                    slot = state.alloc.alloc(ready[pick].request_id)
                     if slot is None:
-                        break
-                    req = ready.pop(0)
-                    task = engine.start_prefill(req.tokens,
-                                                req.shared_prefix_len)
-                    admitting.append((req, task, slot))
-                else:
+                        if not admitting:
+                            break
+                    else:
+                        req = ready.pop(pick)
+                        task = engine.start_prefill(req.tokens,
+                                                    req.shared_prefix_len)
+                        admitting.append((req, task, slot))
+                if not admitting:
                     break
+                ei = (min(range(len(admitting)),
+                          key=lambda j: (
+                              self._task_units_left(admitting[j][1]), j))
+                      if sjf else 0)
+                req, task, slot = admitting[ei]
                 done = engine.prefill_step(task)
                 units += 1
                 prefill_units += 1
                 if done:
-                    admitting.pop(0)
+                    admitting.pop(ei)
                     state, view = engine.insert(
                         task.prefix, state,
                         max_new_tokens=req.max_new_tokens,
@@ -338,6 +442,13 @@ class ContinuousScheduler:
                         elif pending:
                             window = min(window, max(1, int(np.ceil(
                                 pending[0].arrival - step))))
+                    # never fuse past a live request's deadline: the
+                    # sweep retires at host-sync granularity, so the
+                    # window must stop where the earliest deadline lands
+                    dls = [v[0].deadline - step for v in live.values()
+                           if v[0].deadline is not None]
+                    if dls:
+                        window = min(window, max(1, int(np.ceil(min(dls)))))
                     window = max(1, window)
                 state, res = engine.generate(state, max_steps=window)
                 host_syncs += 1
@@ -354,6 +465,8 @@ class ContinuousScheduler:
                 step += 1.0
 
         wall_s = time.time() - t0
+        if engine.reliability is not None:
+            engine.reliability.deadline_expiries = reasons["deadline"]
         if state.alloc.num_active:
             raise AssertionError(
                 f"slot leak: {state.alloc.num_active} slots still "
@@ -378,7 +491,12 @@ class ContinuousScheduler:
             "insert_traces": engine.insert_traces,
             "decode_traces": engine.decode_traces,
             "generated_tokens": total_tokens,
+            "admission_policy": self.admission_policy,
             "stop_reasons": dict(reasons),
+            "deadline_expiries": reasons["deadline"],
+            "fallback_traces": engine.fallback_traces,
+            "reliability": (engine.reliability.metrics()
+                            if engine.reliability is not None else None),
             "prefix_cache": (engine.prefix_cache.stats()
                              if engine.prefix_cache is not None else None),
             "wall_s": wall_s,

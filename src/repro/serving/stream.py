@@ -27,9 +27,11 @@ class Completion:
     finish_step: float           # virtual time its last token was produced
     slot: int                    # slot it occupied (diagnostics)
     # why generation ended: the trace budget ran out ("budget"), the
-    # model emitted its EOS token ("eos"), or a user stop token
-    # ("stop_token"). The stop token itself is the last entry of
-    # ``tokens``; nothing is emitted after it.
+    # model emitted its EOS token ("eos"), a user stop token
+    # ("stop_token"), or the request's virtual-clock deadline passed
+    # ("deadline" — tokens holds whatever was produced in time; empty if
+    # the request never won a slot). For token stops, the stop token
+    # itself is the last entry of ``tokens``; nothing is emitted after.
     stop_reason: str = "budget"
     # wall-clock marks relative to the run start (seconds). The virtual
     # clock stays the unit of latency *accounting*; these feed the

@@ -1,0 +1,367 @@
+"""Reliability layer: fault injection, ABFT checksum verification, and
+graceful degradation.
+
+The contract under test: any fault that changes the stored codes of a
+programmed plan (bit-flips, stuck nibble planes, dropped WDM chunks) is
+detected by the ABFT column-checksum verification on the *next* matmul
+that executes the plan on an exact substrate — 100%, no sampling luck —
+and ADC drift is caught by the scale-sum check. Detection feeds the
+degradation machine: retried dispatches fall back onto a golden
+exact-jnp twin, so served tokens stay bit-identical to a fault-free
+run; repeated violations re-program the offending plan and eventually
+pin the engine in degraded-but-correct mode. Analog substrates get a
+noise-calibrated tolerance and must never false-positive.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypo_compat import given, settings, st  # noqa: E402
+
+from repro import engine
+from repro.configs.base import get_config
+from repro.core import pim
+from repro.models.lm import init_lm
+from repro.reliability import (FAULT_LOG, FaultModel, ReliabilityManager,
+                               ReliabilityPolicy, checksums,
+                               dump_fault_spec, inject_tree,
+                               load_fault_spec, retarget_plans)
+from repro.serving import ContinuousScheduler, poisson_trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_fault_log():
+    FAULT_LOG.clear()
+    yield
+    FAULT_LOG.clear()
+
+
+def _drain():
+    jax.effects_barrier()
+    return FAULT_LOG.drain()
+
+
+def _program(w, substrate, verify="always", tag="t", **cfg_kw):
+    cfg = pim.PimConfig(substrate=substrate, verify=verify, abft_tag=tag,
+                        **cfg_kw)
+    return engine.program(jnp.asarray(w, jnp.float32), cfg)
+
+
+# ---------------------------------------------------------------------------
+# checksum record plumbing
+# ---------------------------------------------------------------------------
+def test_abft_record_is_optional_pytree_child():
+    """Plans without verification flatten exactly as before (4 leaves —
+    legacy checkpoints and treedefs stay valid); verification adds the
+    checksum record as extra leaves that survive jit/scan transforms."""
+    w = np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32)
+    off = _program(w, "exact-jnp", verify="off", tag=None)
+    on = _program(w, "exact-jnp")
+    assert off.abft is None
+    assert len(jax.tree_util.tree_leaves(off)) == 4
+    assert set(on.abft) == {"col_i32", "col_f32", "scale_sum"}
+    assert len(jax.tree_util.tree_leaves(on)) == 7
+    assert on.abft["col_i32"].shape == (16,)
+    # checksums() agrees with a direct recomputation from the codes
+    cs = checksums(on.values, on.scale)
+    np.testing.assert_array_equal(cs["col_i32"], on.abft["col_i32"])
+
+
+def test_clean_plans_never_violate():
+    """No false positives: clean matmuls on every substrate (including
+    analog with real read noise) log checks but zero violations."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(32, 24)).astype(np.float32)
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    for substrate in engine.available_substrates():
+        noisy = substrate.startswith("analog")
+        kw = {"read_noise_sigma": 0.01} if noisy else {}
+        plan = _program(w, substrate, tag=substrate, **kw)
+        mm_kw = {"rng": jax.random.PRNGKey(2)} if noisy else {}
+        engine.matmul(jnp.asarray(x), plan, **mm_kw).block_until_ready()
+        bad = _drain()
+        assert not bad, f"false positive on {substrate}: {bad}"
+    snap = FAULT_LOG.snapshot()
+    assert snap["total_checks"] >= len(engine.available_substrates())
+    assert snap["total_violations"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_exact_substrates_detect_every_storage_fault(seed):
+    """Property: a random storage-fault spec against a random plan is
+    detected on the next verified matmul whenever it changed the stored
+    codes (store_delta > 0) — on both exact substrates, every time."""
+    rng = np.random.default_rng(seed)
+    k, n = int(rng.integers(8, 40)), int(rng.integers(8, 40))
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    x = rng.normal(size=(3, k)).astype(np.float32)
+    model = FaultModel(
+        target="*", seed=seed,
+        bitflips=int(rng.integers(0, 3)),
+        stuck_planes=int(rng.integers(0, 2)),
+        stuck_value=int(rng.integers(0, 16)),
+        dropped_chunks=int(rng.integers(0, 2)))
+    for substrate in ("exact-jnp", "exact-pallas"):
+        plan = _program(w, substrate, tag=f"{substrate}/{seed}")
+        bad_plan, report = inject_tree(plan, [model], _path="p")
+        engine.matmul(jnp.asarray(x), bad_plan).block_until_ready()
+        bad = _drain()
+        detectable = sum(e.get("store_delta") or 0 for e in report)
+        if detectable > 0:
+            assert bad, (f"{substrate}: undetected fault "
+                         f"(report={report})")
+        elif not report:
+            assert not bad, f"{substrate}: phantom violation {bad}"
+
+
+def test_adc_drift_detected_on_exact_substrates():
+    """Gain/offset drift corrupts the per-column scales, not the codes:
+    the scale-sum checksum catches it even though store_delta is 0."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(24, 16)).astype(np.float32)
+    x = rng.normal(size=(2, 24)).astype(np.float32)
+    model = FaultModel(target="*", seed=0, adc_gain=1.05)
+    for substrate in ("exact-jnp", "exact-pallas"):
+        plan = _program(w, substrate, tag=substrate)
+        bad_plan, report = inject_tree(plan, [model], _path="p")
+        assert report and all((e.get("store_delta") or 0) == 0
+                              for e in report)
+        engine.matmul(jnp.asarray(x), bad_plan).block_until_ready()
+        assert _drain(), f"{substrate}: ADC drift undetected"
+
+
+def test_sample_mode_detects_column_faults():
+    """verify='sample' checks one deterministic row per matmul — column
+    checksums still cover every output column, so a storage fault that
+    perturbs the sampled row's products is caught at a fraction of the
+    checking cost (the plane audit is unconditional on float paths)."""
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    plan = _program(w, "exact-jnp", verify="sample")
+    bad_plan, report = inject_tree(
+        plan, [FaultModel(target="*", seed=1, stuck_planes=1,
+                          stuck_value=15)], _path="p")
+    assert sum(e.get("store_delta") or 0 for e in report) > 0
+    engine.matmul(jnp.asarray(x), bad_plan).block_until_ready()
+    assert _drain()
+
+
+def test_pallas_rowsum_matches_ref():
+    """The fused kernel's accumulator row-sum output (the ABFT probe) is
+    bit-identical to the reference row-sum at awkward shapes."""
+    from repro.kernels.pim_matmul import ops as pim_ops
+    from repro.quant.nibbles import to_nibbles
+    from repro.quant.quantize import quantize
+    rng = np.random.default_rng(5)
+    for m, k, n in ((3, 17, 9), (8, 64, 33), (1, 5, 128)):
+        a_q = quantize(jnp.asarray(rng.normal(size=(m, k)), jnp.float32),
+                       bits=8, axis=(1,))
+        w_q = quantize(jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+                       bits=4, axis=(0,))
+        a_planes = to_nibbles(a_q.values, 8)
+        w_planes = to_nibbles(w_q.values, 4)
+        w_scale = jnp.broadcast_to(w_q.scale.astype(jnp.float32), (1, n))
+        outs = {}
+        for use_ref in (True, False):
+            outs[use_ref] = pim_ops.pim_matmul_fused(
+                a_planes, w_planes, a_q.scale, w_scale, use_ref=use_ref,
+                want_rowsum=True)
+        np.testing.assert_array_equal(outs[True][1], outs[False][1])
+        np.testing.assert_array_equal(outs[True][0], outs[False][0])
+
+
+# ---------------------------------------------------------------------------
+# fault-spec serialization
+# ---------------------------------------------------------------------------
+def test_fault_spec_roundtrip_and_validation(tmp_path):
+    models = [FaultModel(target="*wq*", seed=7, bitflips=2),
+              FaultModel(target="layers/mlp/*", stuck_planes=1,
+                         stuck_value=15, sticky=False)]
+    path = tmp_path / "spec.json"
+    path.write_text(dump_fault_spec(models))
+    assert load_fault_spec(str(path)) == models
+    path.write_text('{"faults": [{"target": "*", "warp_core": 1}]}')
+    with pytest.raises(ValueError, match="warp_core"):
+        load_fault_spec(str(path))
+
+
+def test_fault_injection_is_deterministic():
+    """Same spec + same tree path => bit-identical corruption (what
+    makes sticky re-injection after repair meaningful)."""
+    w = np.random.default_rng(8).normal(size=(20, 12)).astype(np.float32)
+    plan = _program(w, "exact-jnp")
+    model = FaultModel(target="*", seed=9, bitflips=3, stuck_planes=1)
+    t1, r1 = inject_tree(plan, [model], _path="a/b")
+    t2, r2 = inject_tree(plan, [model], _path="a/b")
+    assert r1 == r2
+    for l1, l2 in zip(jax.tree_util.tree_leaves(t1),
+                      jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(l1, l2)
+    _, r3 = inject_tree(plan, [model], _path="a/c")
+    assert r3 != r1, "a different path draws different fault sites"
+    # the checksum record itself is never touched by injection
+    np.testing.assert_array_equal(t1.abft["col_i32"], plan.abft["col_i32"])
+
+
+def test_retarget_plans_preserves_structure():
+    from repro.launch.serve import plan_params_for_pim
+    cfg = get_config("qwen2.5-3b").reduced(num_layers=2, d_model=64,
+                                           vocab=128)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    planned = plan_params_for_pim(
+        params, pim.PimConfig(substrate="exact-pallas", verify="always"))
+    fb = retarget_plans(planned, "exact-jnp", verify="off")
+    assert (jax.tree_util.tree_structure(jax.tree_util.tree_leaves(fb))
+            is not None)
+    flat_a = jax.tree_util.tree_leaves(planned)
+    flat_b = jax.tree_util.tree_leaves(fb)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    wq = fb["layers"]["attn"]["wq_dh"]
+    assert wq.cfg.substrate == "exact-jnp" and wq.cfg.verify == "off"
+    src = planned["layers"]["attn"]["wq_dh"]
+    assert src.cfg.substrate == "exact-pallas"
+    assert src.cfg.abft_tag == "layers/attn/wq_dh"
+
+
+# ---------------------------------------------------------------------------
+# degradation machine
+# ---------------------------------------------------------------------------
+def test_manager_repair_clears_transient_fault():
+    """A non-sticky (transient) fault: first violation triggers a
+    re-program from golden, after which the plan verifies clean."""
+    rng = np.random.default_rng(10)
+    w = rng.normal(size=(24, 16)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(2, 24)), jnp.float32)
+    plan = _program(w, "exact-jnp", tag="p")
+    man = ReliabilityManager(
+        {"p": plan},
+        [FaultModel(target="*", seed=2, bitflips=2, sticky=False)],
+        ReliabilityPolicy(repair_after=1, degrade_after=3))
+    assert man.injection_report
+    engine.matmul(x, man.params["p"]).block_until_ready()
+    bad = man.drain()
+    assert bad
+    man.record_violations(bad)
+    assert man.maybe_repair()
+    assert man.repairs == 1 and not man.degraded
+    engine.matmul(x, man.params["p"]).block_until_ready()
+    assert not man.drain(), "repaired plan must verify clean"
+
+
+def test_manager_sticky_fault_degrades():
+    """A sticky (hard) fault survives re-programming: repairs exhaust
+    and the manager pins itself degraded, serving the golden fallback."""
+    rng = np.random.default_rng(11)
+    w = rng.normal(size=(24, 16)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(2, 24)), jnp.float32)
+    plan = _program(w, "exact-jnp", tag="p")
+    man = ReliabilityManager(
+        {"p": plan},
+        [FaultModel(target="*", seed=2, bitflips=2, sticky=True)],
+        ReliabilityPolicy(repair_after=1, degrade_after=2))
+    for round_ in range(2):
+        engine.matmul(x, man.params["p"]).block_until_ready()
+        bad = man.drain()
+        assert bad, f"sticky fault must re-violate (round {round_})"
+        man.record_violations(bad)
+        man.maybe_repair()
+    assert man.degraded
+    fb = man.serving_params()
+    assert fb["p"].cfg.verify == "off"
+    y = engine.matmul(x, fb["p"])
+    ref = engine.matmul(x, plan)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    assert not man.drain()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: faults never corrupt served tokens
+# ---------------------------------------------------------------------------
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_served_tokens_survive_random_faults(seed):
+    """Property over random fault specs: an armed scheduler under
+    injected faults serves token streams bit-identical to the fault-free
+    run — ABFT detects, the fallback replays, nothing hangs."""
+    cfg = get_config("qwen2.5-3b").reduced(num_layers=2, d_model=64,
+                                           vocab=128)
+    params = _SERVE_CACHE.setdefault(
+        "params", init_lm(cfg, jax.random.PRNGKey(0)))
+    from repro.launch.serve import plan_params_for_pim
+    planned = _SERVE_CACHE.setdefault("planned", plan_params_for_pim(
+        params, pim.PimConfig(substrate="exact-jnp", verify="always")))
+    reqs = poisson_trace(n=4, rate=0.7, prompt_lens=[2, 5, 8],
+                         gen_lens=[2, 4], vocab=cfg.vocab_size, seed=seed)
+    if "golden" not in _SERVE_CACHE:
+        sched0 = ContinuousScheduler(planned, cfg, num_slots=2,
+                                     prompt_pad=10, max_len=16)
+        _SERVE_CACHE["golden_sched"] = sched0
+        _SERVE_CACHE["golden"] = True
+    golden = _SERVE_CACHE["golden_sched"].run(reqs).tokens_by_id()
+    FAULT_LOG.clear()
+
+    rng = np.random.default_rng(seed)
+    model = FaultModel(
+        target=str(rng.choice(["*", "*wq*", "*mlp*"])), seed=seed,
+        bitflips=int(rng.integers(1, 3)),
+        stuck_planes=int(rng.integers(0, 2)), stuck_value=15,
+        adc_gain=float(rng.choice([1.0, 1.1])))
+    man = ReliabilityManager(planned, [model],
+                             ReliabilityPolicy(repair_after=2,
+                                               degrade_after=2))
+    sched = ContinuousScheduler(planned, cfg, num_slots=2, prompt_pad=10,
+                                max_len=16, reliability=man)
+    got = sched.run(reqs).tokens_by_id()
+    for rid, toks in golden.items():
+        np.testing.assert_array_equal(got[rid], toks)
+    detectable = sum(e.get("store_delta") or 0
+                     for e in man.injection_report)
+    if detectable or any(e["kind"] == "adc_drift"
+                         for e in man.injection_report):
+        assert man.detections > 0, \
+            f"injected faults undetected: {man.injection_report}"
+        assert man.retries > 0
+
+
+_SERVE_CACHE = {}
+
+
+# ---------------------------------------------------------------------------
+# persisted-plan integrity
+# ---------------------------------------------------------------------------
+def test_load_plans_detects_corrupt_leaf(tmp_path):
+    """save_plans records a per-leaf sha256; a byte flipped in the
+    stored arrays surfaces as PlanCorruptionError naming the offending
+    leaf instead of silently serving corrupted weights."""
+    import zipfile
+
+    rng = np.random.default_rng(12)
+    plans = {"layers": {"wq": _program(
+        rng.normal(size=(16, 8)).astype(np.float32), "exact-jnp")}}
+    d = str(tmp_path / "plans")
+    engine.save_plans(d, plans)
+    restored, _, _ = engine.load_plans(d)
+    np.testing.assert_array_equal(restored["layers"]["wq"].planes,
+                                  plans["layers"]["wq"].planes)
+
+    npz = next(Path(d).rglob("arrays.npz"))
+    with zipfile.ZipFile(npz) as z:
+        names = z.namelist()
+        blobs = {nm: bytearray(z.read(nm)) for nm in names}
+    victim = sorted(names)[0]
+    blobs[victim][-1] ^= 0xFF           # flip a payload byte
+    with zipfile.ZipFile(npz, "w") as z:
+        for nm in names:
+            z.writestr(nm, bytes(blobs[nm]))
+    with pytest.raises(engine.PlanCorruptionError) as ei:
+        engine.load_plans(d)
+    assert ei.value.leaf_path, "error must name the corrupt leaf"

@@ -341,3 +341,85 @@ def test_trace_file_driven_arrivals(tmp_path):
     by_id = {r["id"]: r for r in res["requests"]}
     assert by_id["explicit"]["prompt_len"] == 4
     assert len(by_id["explicit"]["tokens"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines and admission policy
+# ---------------------------------------------------------------------------
+def test_deadline_retires_without_slot_leak():
+    """A deadline expiring mid-decode retires the request with
+    stop_reason='deadline' and the tokens produced in time; one expiring
+    in the queue yields an empty completion; neither leaks a slot (the
+    scheduler asserts on drain) and the freed slot serves the rest."""
+    cfg = _small_cfg()
+    params = _PARAMS_CACHE.setdefault(
+        "plain", init_lm(cfg, jax.random.PRNGKey(0)))
+    # ids sort a < b < c: "a" admits first into the single slot
+    reqs = [Request(request_id="a", tokens=np.arange(3, dtype=np.int32),
+                    max_new_tokens=10, arrival=0.0, deadline=4.0),
+            Request(request_id="b", tokens=np.arange(5, dtype=np.int32),
+                    max_new_tokens=6, arrival=0.0),
+            Request(request_id="c", tokens=np.arange(4, dtype=np.int32),
+                    max_new_tokens=10, arrival=0.0, deadline=0.5)]
+    sched = ContinuousScheduler(params, cfg, num_slots=1, prompt_pad=8,
+                                max_len=18)
+    res = sched.run(reqs)
+    by = {c.request_id: c for c in res.completions}
+    assert by["a"].stop_reason == "deadline"
+    assert 0 < by["a"].tokens.shape[0] < 10
+    # the produced prefix is still the exact static tokens
+    ref = static_generate(params, cfg, reqs[0].tokens, 10)
+    np.testing.assert_array_equal(by["a"].tokens,
+                                  ref[:by["a"].tokens.shape[0]])
+    assert by["c"].stop_reason == "deadline"
+    assert by["c"].tokens.shape[0] == 0
+    assert by["b"].stop_reason == "budget"
+    assert by["b"].tokens.shape[0] == 6
+    assert res.metrics["deadline_expiries"] == 2
+    assert res.metrics["stop_reasons"]["deadline"] == 2
+
+
+def test_deadline_validation():
+    cfg = _small_cfg()
+    params = _PARAMS_CACHE.setdefault(
+        "plain", init_lm(cfg, jax.random.PRNGKey(0)))
+    sched = ContinuousScheduler(params, cfg, num_slots=1, prompt_pad=8,
+                                max_len=18)
+    bad = [Request(request_id=0, tokens=np.arange(3, dtype=np.int32),
+                   max_new_tokens=2, arrival=2.0, deadline=2.0)]
+    with pytest.raises(ValueError, match="deadline"):
+        sched.run(bad)
+    with pytest.raises(ValueError, match="admission_policy"):
+        ContinuousScheduler(params, cfg, num_slots=1, prompt_pad=8,
+                            max_len=18, admission_policy="lifo")
+
+
+def test_sjf_admission_improves_short_prompt_ttft():
+    """Under 'sjf' a one-chunk prompt jumps a long chunked-prefill
+    admission: its TTFT beats the FIFO run's, and tokens stay identical
+    under both policies (admission order never changes content)."""
+    cfg = _small_cfg()
+    params = _PARAMS_CACHE.setdefault(
+        "plain", init_lm(cfg, jax.random.PRNGKey(0)))
+
+    def mk():
+        return [Request(request_id="big",
+                        tokens=np.arange(12, dtype=np.int32) % 100,
+                        max_new_tokens=2, arrival=0.0),
+                Request(request_id="small",
+                        tokens=np.arange(2, dtype=np.int32) % 100,
+                        max_new_tokens=2, arrival=0.0)]
+
+    ttft, toks = {}, {}
+    for pol in ("fifo", "sjf"):
+        sched = ContinuousScheduler(params, cfg, num_slots=2,
+                                    prompt_pad=12, max_len=16,
+                                    prefill_chunk=2, admission_policy=pol)
+        res = sched.run(mk())
+        ttft[pol] = {c.request_id: c.ttft_steps for c in res.completions}
+        toks[pol] = res.tokens_by_id()
+        assert res.metrics["admission_policy"] == pol
+    assert ttft["sjf"]["small"] < ttft["fifo"]["small"], \
+        "sjf must admit the short prompt ahead of the long admission"
+    for rid in ("big", "small"):
+        np.testing.assert_array_equal(toks["fifo"][rid], toks["sjf"][rid])

@@ -154,10 +154,11 @@ def test_stop_token_retires_slot_early():
 @settings(max_examples=5, deadline=None)
 @given(st.integers(0, 10_000))
 def test_stop_invariants_random_traffic(seed):
-    """Random traffic with a random stop set: every request completes
-    exactly once with tokens equal to the truncated static reference,
-    no slot leaks (the scheduler asserts on drain), and no token ever
-    follows a stop token."""
+    """Random traffic with a random stop set and random deadlines:
+    every request completes exactly once, no slot leaks (the scheduler
+    asserts on drain), no token ever follows a stop token, and a
+    deadline-expired request retires with a strict prefix of its
+    reference tokens (its slot freed, never hanging the drain loop)."""
     cfg, params = _params()
     rng = np.random.default_rng(seed)
     stop_set = {int(t) for t in
@@ -167,6 +168,9 @@ def test_stop_invariants_random_traffic(seed):
                          prompt_lens=[1, 3, 6, 10],
                          gen_lens=[1, 2, 5, 8], vocab=cfg.vocab_size,
                          seed=seed)
+    for r in reqs:
+        if rng.random() < 0.4:
+            r.deadline = r.arrival + float(rng.uniform(0.5, 12.0))
     sched = ContinuousScheduler(params, cfg, num_slots=2, prompt_pad=10,
                                 max_len=18,
                                 stop_tokens=tuple(sorted(stop_set)))
@@ -179,6 +183,13 @@ def test_stop_invariants_random_traffic(seed):
         ref = _truncate_at_stop(
             static_generate(params, cfg, r.tokens, r.max_new_tokens),
             stop_set)
+        if c.stop_reason == "deadline":
+            assert r.deadline is not None
+            assert c.finish_step >= r.deadline
+            n = len(c.tokens)
+            assert n < len(ref), "a full sequence must not expire"
+            np.testing.assert_array_equal(c.tokens, ref[:n])
+            continue
         np.testing.assert_array_equal(c.tokens, ref)
         body, last = c.tokens[:-1].tolist(), int(c.tokens[-1])
         assert not any(t in stop_set for t in body), \
@@ -345,6 +356,70 @@ def test_shared_prefix_through_scheduler():
     assert r0.metrics["prefix_cache"] is None
 
 
+def test_prefix_cache_lru_eviction_under_churn():
+    """LRU capacity edges: the cache never exceeds capacity, the oldest
+    untouched entry is the one evicted, a re-inserted evicted prompt is
+    bit-identical to its original miss, and a touched (recently hit)
+    entry survives the churn."""
+    from repro.serving.prefix import PrefixCache, PrefixEntry, token_key
+    cache = PrefixCache(capacity=2)
+    with pytest.raises(ValueError):
+        PrefixCache(capacity=0)
+    keys = [token_key(np.asarray([i, i + 1], np.int32)) for i in range(3)]
+    for i, k in enumerate(keys):
+        cache.put(k, PrefixEntry(kind="full", length=2, kv={},
+                                 first_token=i))
+    assert len(cache) == 2, "capacity bound holds under churn"
+    assert cache.get(keys[0]) is None, "oldest entry evicted"
+    assert cache.get(keys[2]).first_token == 2
+    # keys[2] was just touched; inserting a new entry must evict keys[1]
+    cache.put(keys[0], PrefixEntry(kind="full", length=2, kv={},
+                                   first_token=0))
+    assert cache.get(keys[1]) is None
+    assert cache.get(keys[2]) is not None
+
+    # through the engine: evict a prompt, re-prefill it (a fresh miss),
+    # and the recomputed KV decodes to exactly the original tokens
+    cfg, params = _params()
+    eng = ServingEngine(params, cfg, num_slots=2, prompt_pad=8,
+                        max_len=14, prefix_cache_capacity=1)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(2)]
+    outs = {}
+    for round_ in range(2):           # round 2 re-prefills evicted prompts
+        for i, prompt in enumerate(prompts):
+            p = eng.prefill(prompt)
+            assert not p.from_cache, "capacity-1 churn evicts everything"
+            state = eng.init_state()
+            state, view = eng.insert(p, state, max_new_tokens=4,
+                                     request_id=(round_, i))
+            outs.setdefault(i, []).append(_drain(eng, state, view))
+    for i in outs:
+        np.testing.assert_array_equal(outs[i][0], outs[i][1])
+    assert len(eng.prefix_cache) == 1
+
+
+def test_prefix_cache_invalidation_blocks_stale_kv():
+    """invalidate_all (fired when plans are re-programmed under the
+    engine) drops every entry: the next identical prompt recomputes its
+    KV instead of reusing a stale one, and the stats record it."""
+    cfg, params = _params()
+    eng = ServingEngine(params, cfg, num_slots=2, prompt_pad=8,
+                        max_len=14, prefix_cache_capacity=4)
+    prompt = np.arange(5, dtype=np.int32)
+    p0 = eng.prefill(prompt)
+    assert eng.prefill(prompt).from_cache
+    dropped = eng.prefix_cache.invalidate_all()
+    assert dropped == 1
+    p2 = eng.prefill(prompt)
+    assert not p2.from_cache, "no stale KV reuse after invalidation"
+    assert p2.first_token == p0.first_token
+    stats = eng.prefix_cache.stats()
+    assert stats["invalidations"] == 1
+    assert stats["entries"] == 1      # the recomputed entry
+
+
 # ---------------------------------------------------------------------------
 # compile-once with every feature on
 # ---------------------------------------------------------------------------
@@ -381,7 +456,8 @@ def test_serve_continuous_stop_reason_metrics_json(tmp_path):
                            shared_prefix=3, eos_token=7,
                            stop_tokens=(3, 11), metrics_json=str(path))
     data = json.loads(path.read_text())
-    assert set(data["stop_reasons"]) == {"budget", "eos", "stop_token"}
+    assert set(data["stop_reasons"]) == {"budget", "eos", "stop_token",
+                                         "deadline"}
     assert sum(data["stop_reasons"].values()) == 4
     assert all(r["stop_reason"] in ("budget", "eos", "stop_token")
                for r in data["requests"])
